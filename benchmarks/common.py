@@ -1,0 +1,55 @@
+"""Shared benchmark plumbing: timed simulator runs + CSV emission."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import HMSConfig, make_trace, simulate
+
+# representative subset (full suite via REPRO_BENCH_FULL=1)
+WORKLOADS = ["stencil", "pathfnd", "bfs_tu", "sssp_ttc", "kcore",
+             "bert_inf", "gpt_train", "llm_dec"]
+if os.environ.get("REPRO_BENCH_FULL"):
+    from repro.core.traces import WORKLOADS as _ALL
+    WORKLOADS = list(_ALL)
+
+N = int(os.environ.get("REPRO_BENCH_N", 120_000))
+
+_trace_cache: Dict[str, object] = {}
+_result_cache: Dict[tuple, object] = {}
+
+
+def trace(name):
+    if name not in _trace_cache:
+        _trace_cache[name] = make_trace(name, n=N)
+    return _trace_cache[name]
+
+
+def sim(workload: str, **cfg_kw):
+    key = (workload, tuple(sorted(cfg_kw.items())))
+    if key in _result_cache:
+        return _result_cache[key]
+    t = trace(workload)
+    cfg = HMSConfig(footprint=t.footprint, **cfg_kw)
+    t0 = time.time()
+    r = simulate(t, cfg)
+    r.wall_s = time.time() - t0
+    _result_cache[key] = r
+    return r
+
+
+def emit(rows: List[tuple]):
+    """rows: (name, us_per_call, derived) — the run.py CSV contract."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def geomean(xs):
+    xs = np.asarray(list(xs), dtype=float)
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-12)))))

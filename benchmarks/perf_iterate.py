@@ -1,0 +1,95 @@
+"""§Perf hillclimb driver: compare lowering variants of one cell.
+
+Each named variant re-lowers the cell with different framework options and
+reports the three roofline terms; the hypothesis -> change -> before/after
+log lives in EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterate \
+        --arch grok-1-314b --shape train_4k \
+        --variants baseline ep_moe no_sp naive_attn
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+VARIANTS = {
+    "baseline": {},
+    "ep_moe": {"moe_impl": "ep"},
+    "no_sp": {"sequence_parallel": False},
+    "no_remat": {"remat": False},
+    "sp_barrier": {"sp_barrier": True},
+    "grad_barrier": {"grad_barrier": True},
+    "sp_prenorm": {"sp_prenorm": True},
+    "pure_fsdp": {"pure_fsdp": True},
+    "grad_shard": {"grad_shard": True},
+    "pure_fsdp_gs": {"pure_fsdp": True, "grad_shard": True},
+    "pure_fsdp_noremat": {"pure_fsdp": True, "remat": False},
+    "sp_prenorm_gb": {"sp_prenorm": True, "grad_barrier": True},
+    "ep_prenorm": {"sp_prenorm": True, "moe_impl": "ep"},
+    "all_barriers": {"grad_barrier": True, "sp_barrier": True},
+    "ep_sp_barrier": {"moe_impl": "ep", "sp_barrier": True},
+    "kv_replicate": {"kv_mode": "replicate"},
+    "kv_heads": {"kv_mode": "heads"},
+    "kv_head_dim": {"kv_mode": "head_dim"},
+    "no_moe_shard_map": {"moe_shard_map": False},
+}
+
+
+def terms(src):
+    """Kernel-adjusted memory term (attention score intermediates live in
+    VMEM under the Pallas kernels).  Raw (uncorrected) numbers — the
+    bf16-wire correction is applied once, in the roofline report."""
+    t_c = src["flops"] / PEAK_FLOPS
+    bytes_k = max(src["bytes"] - src.get("attn_score_bytes", 0.0),
+                  0.02 * src["bytes"])
+    t_m = bytes_k / HBM_BW
+    t_x = sum(src["collective_bytes"].values()) / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    return t_c, t_m, t_x, dom[0]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", nargs="+", default=["baseline"])
+    ap.add_argument("--json")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+
+    out = {}
+    for name in args.variants:
+        kw = VARIANTS[name]
+        try:
+            r = lower_cell(args.arch, args.shape, multi_pod=False,
+                           probe=True, verbose=False, **kw)
+            src = r["probe"]
+            t_c, t_m, t_x, dom = terms(src)
+            live = r["deploy"]["per_device_bytes"]["total_live"] / 2**30
+            out[name] = {"t_compute": t_c, "t_memory": t_m,
+                         "t_collective": t_x, "dominant": dom,
+                         "live_gib": live,
+                         "roofline_frac": t_c / max(t_c, t_m, t_x),
+                         "collective_bytes": src["collective_bytes"]}
+            print(f"{name:18s} tc={t_c:7.3f}s tm={t_m:7.3f}s "
+                  f"tx={t_x:7.3f}s dom={dom:10s} live={live:6.1f}GiB "
+                  f"roofline={t_c/max(t_c, t_m, t_x):.2f}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            out[name] = {"error": repr(e)}
+            print(f"{name:18s} FAILED: {e}", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

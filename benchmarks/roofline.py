@@ -1,0 +1,136 @@
+"""§Roofline: three-term roofline per (arch x shape) from dry-run artifacts.
+
+Hardware constants (TPU v5e-class, per assignment):
+    197 TFLOP/s bf16 per chip | 819 GB/s HBM | ~50 GB/s/link ICI
+
+Terms (seconds, per step):
+    t_compute    = HLO_FLOPs_per_device   / 197e12
+    t_memory     = HLO_bytes_per_device   / 819e9
+    t_collective = coll_bytes_per_device  / 50e9
+
+FLOPs/bytes come from the probe extrapolation (scan bodies are counted once
+by XLA's cost analysis, so the deploy numbers under-report; see
+launch/dryrun.py).  Collective bytes are per-device SPMD-HLO result sizes.
+MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for train, 2*N_active per
+token for serve steps.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def _tokens(cell) -> float:
+    from repro.configs import SHAPES
+    sh = SHAPES[cell["shape"]]
+    if sh.kind == "train":
+        return sh.seq_len * sh.global_batch
+    if sh.kind == "prefill":
+        return sh.seq_len * sh.global_batch
+    return sh.global_batch          # decode: one token per sequence
+
+
+def model_flops(cell) -> float:
+    from repro.configs import SHAPES
+    sh = SHAPES[cell["shape"]]
+    n = cell["active_params"]
+    toks = _tokens(cell)
+    mult = 6.0 if sh.kind == "train" else 2.0
+    return mult * n * toks
+
+
+def analyze(path: str = None) -> List[Dict]:
+    path = path or os.path.join(ART, "dryrun_1pod.json")
+    with open(path) as f:
+        cells = json.load(f)
+    rows = []
+    for c in cells:
+        if "skipped" in c or "error" in c:
+            rows.append(c)
+            continue
+        src = c.get("probe") or c["deploy"]
+        ndev = c["n_devices"]
+        flops = src["flops"]
+        bytes_ = src["bytes"]
+        # Attention-score intermediates stay in VMEM under the flash/paged
+        # Pallas kernels; the XLA path spills them to HBM.  Report both the
+        # raw XLA memory term and the kernelized one.
+        attn_bytes = src.get("attn_score_bytes", 0.0)
+        bytes_kern = max(bytes_ - attn_bytes, bytes_ * 0.02)
+        coll = sum(src["collective_bytes"].values())
+        t_c = flops / PEAK_FLOPS
+        t_m = bytes_ / HBM_BW
+        t_mk = bytes_kern / HBM_BW
+        t_x = coll / LINK_BW
+        dominant = max(("compute", t_c), ("memory", t_mk),
+                       ("collective", t_x), key=lambda kv: kv[1])[0]
+        mf = model_flops(c)
+        useful = mf / max(1.0, flops * ndev)
+        bound = max(t_c, t_mk, t_x)
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"],
+            "t_compute_s": t_c, "t_memory_raw_s": t_m,
+            "t_memory_s": t_mk, "t_collective_s": t_x,
+            "dominant": dominant,
+            "model_flops": mf,
+            "hlo_flops_global": flops * ndev,
+            "useful_flop_frac": useful,
+            "roofline_frac": t_c / bound if bound else 0.0,
+            "live_gib": c["deploy"]["per_device_bytes"]["total_live"]
+            / 2**30,
+            "collective_breakdown": src["collective_bytes"],
+        })
+    return rows
+
+
+def run(results: Dict) -> List[tuple]:
+    try:
+        rows = analyze()
+    except FileNotFoundError:
+        return [("roofline.missing", 0.0,
+                 "run launch/dryrun.py --all --probe first")]
+    out = []
+    for r in rows:
+        if "dominant" not in r:
+            out.append((f"roofline.{r['arch']}.{r['shape']}", 0.0,
+                        r.get("skipped", r.get("error", "?"))[:60]))
+            continue
+        out.append((
+            f"roofline.{r['arch']}.{r['shape']}", 0.0,
+            f"tc={r['t_compute_s']:.3f}|tm={r['t_memory_s']:.3f}"
+            f"|tx={r['t_collective_s']:.3f}|dom={r['dominant']}"
+            f"|roofline={r['roofline_frac']:.2f}"
+            f"|useful={r['useful_flop_frac']:.2f}"))
+    results["roofline"] = rows
+    return out
+
+
+def print_table(rows: Optional[List[Dict]] = None):
+    rows = rows or analyze()
+    hdr = (f"{'arch':22s} {'shape':12s} {'t_comp':>8s} {'t_memK':>8s} "
+           f"{'t_memRaw':>9s} {'t_coll':>8s} {'dom':>10s} {'roofl':>6s} "
+           f"{'useful':>7s} {'GiB':>6s}")
+    print(hdr)
+    for r in rows:
+        if "dominant" not in r:
+            print(f"{r['arch']:22s} {r['shape']:12s}  -- "
+                  f"{r.get('skipped', r.get('error', ''))[:50]}")
+            continue
+        print(f"{r['arch']:22s} {r['shape']:12s} "
+              f"{r['t_compute_s']:8.3f} {r['t_memory_s']:8.3f} "
+              f"{r['t_memory_raw_s']:9.3f} "
+              f"{r['t_collective_s']:8.3f} {r['dominant']:>10s} "
+              f"{r['roofline_frac']:6.2f} {r['useful_flop_frac']:7.2f} "
+              f"{r['live_gib']:6.1f}")
+
+
+if __name__ == "__main__":
+    print_table()

@@ -1,0 +1,52 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call is simulator/kernel
+wall time where meaningful, 0.0 for derived-metric rows) and writes the full
+detail to benchmarks/artifacts/results.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [figure ...]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+
+def main() -> None:
+    from . import figures, kernel_bench, roofline
+    from .common import emit
+
+    suites = {
+        "fig11": figures.fig11_runtime,
+        "fig12": figures.fig12_hitrate,
+        "fig13": figures.fig13_traffic,
+        "fig14": figures.fig14_bypass,
+        "fig16": figures.fig16_linesize,
+        "fig17": figures.fig17_footprint,
+        "fig18": figures.fig18_ctc_ways,
+        "fig19": figures.fig19_energy,
+        "fig20": figures.fig20_throttle,
+        "prior": figures.prior_traffic,
+        "kernels": kernel_bench.run,
+        "roofline": roofline.run,
+    }
+    want = sys.argv[1:] or list(suites)
+    results = {}
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    for name in want:
+        rows = suites[name](results)
+        emit(rows)
+    art = os.path.join(os.path.dirname(__file__), "artifacts")
+    os.makedirs(art, exist_ok=True)
+    with open(os.path.join(art, "results.json"), "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"# total {time.time() - t0:.0f}s; "
+          f"detail -> benchmarks/artifacts/results.json")
+
+
+if __name__ == "__main__":
+    main()

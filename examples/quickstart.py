@@ -1,0 +1,50 @@
+"""Quickstart: build a small model, train a few steps, decode a few tokens.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ShapeSpec, get_config
+from repro.data.synthetic import for_model
+from repro.launch import steps as steps_lib
+from repro.models import decode_step, init_params, prefill
+from repro.optim import adamw
+from repro.parallel.mesh_ctx import MeshCtx
+
+
+def main():
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    print(f"model: {cfg.name} ({cfg.param_count():,} params analytic)")
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(params)
+    step = jax.jit(steps_lib.make_train_step(cfg, MeshCtx()))
+
+    data = for_model(cfg, seq_len=64, global_batch=8)
+    for i, batch in zip(range(10), data):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, m = step(params, opt, batch)
+        print(f"step {i:2d} loss {float(m['loss']):.4f} "
+              f"gnorm {float(m['grad_norm']):.2f}")
+
+    # greedy decode from a short prompt
+    prompt = jnp.asarray(np.arange(1, 9)[None, :], jnp.int32)
+    lg, cache = prefill(params, {"tokens": prompt}, cfg, max_len=32)
+    tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+    out = [int(tok[0, 0])]
+    for pos in range(8, 14):
+        lg, cache = decode_step(params, tok, cache, jnp.int32(pos), cfg)
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    print("generated:", out)
+
+
+if __name__ == "__main__":
+    main()

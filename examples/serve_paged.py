@@ -1,0 +1,59 @@
+"""End-to-end serving driver: batched requests over a two-tier paged KV
+cache (the paper's DRAM-cache machinery on the decode path).
+
+Serves a small qwen-family model; the memtier PagedKVManager tracks page
+residency, spills cold pages to the host tier, keeps append pages pinned
+(write filtering), and reports fast-hit / slow-fetch / spill counters.
+
+    PYTHONPATH=src python examples/serve_paged.py [--requests 12]
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import Engine, Request, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    # deliberately small fast pool so pages spill to the capacity tier
+    eng = Engine(cfg, params, ServeConfig(max_batch=4, max_len=128,
+                                          page_size=8, fast_pages=24))
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for rid in range(args.requests):
+        plen = int(rng.integers(4, 24))
+        eng.submit(Request(rid, rng.integers(
+            1, cfg.vocab, size=plen).astype(np.int32),
+            max_new=args.max_new))
+    outs = eng.run()
+    dt = time.time() - t0
+
+    n_tok = sum(len(v) for v in outs.values())
+    print(f"served {len(outs)} requests / {n_tok} tokens "
+          f"in {dt:.1f}s ({n_tok/dt:.1f} tok/s on CPU)")
+    st = eng.kv_stats
+    total = max(1, st["fast_hits"] + st["slow_fetches"])
+    print(f"paged-KV: fast-hit rate {st['fast_hits']/total:.1%}, "
+          f"slow fetches {st['slow_fetches']}, spills {st['spills']} "
+          f"(append pages pinned: write filtering)")
+    for rid in sorted(outs)[:4]:
+        print(f"  req {rid}: {outs[rid].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Track-A showcase: run the HMS simulator across the workload suite and
+print the paper-style comparison table (Fig. 11/12/13 condensed).
+
+    PYTHONPATH=src python examples/simulate_hms.py [--n 120000]
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=80_000)
+    ap.add_argument("--workloads", nargs="*",
+                    default=["stencil", "bfs_tu", "sssp_ttc", "bert_inf",
+                             "llm_dec"])
+    args = ap.parse_args()
+
+    from repro.core import HMSConfig, make_trace, simulate
+
+    print(f"{'workload':10s} {'HBM(ovs)':>9s} {'SCM':>7s} {'HMS':>7s} "
+          f"{'hitR':>5s} {'hitW':>5s} {'CTC':>5s} {'byp1':>5s} "
+          f"{'traffic':>8s} {'E_save':>7s}")
+    for w in args.workloads:
+        t = make_trace(w, n=args.n)
+        base = dict(footprint=t.footprint)
+        inf = simulate(t, HMSConfig(organization="inf_hbm", **base))
+        hbm = simulate(t, HMSConfig(organization="hbm", **base))
+        scm = simulate(t, HMSConfig(organization="scm", **base))
+        hms = simulate(t, HMSConfig(**base))
+        rel = lambda r: r.runtime_cycles / inf.runtime_cycles
+        esave = 1 - sum(hms.energy_pj.values()) / sum(hbm.energy_pj.values())
+        print(f"{w:10s} {rel(hbm):9.2f} {rel(scm):7.2f} {rel(hms):7.2f} "
+              f"{hms.hit_rate_read:5.2f} {hms.hit_rate_write:5.2f} "
+              f"{hms.ctc_hit_rate:5.2f} {hms.bypass_l1_frac:5.2f} "
+              f"{hms.total_traffic/inf.total_traffic:8.2f} "
+              f"{esave:7.1%}")
+    print("\n(runtime columns normalized to infinite-capacity HBM; "
+          "HMS should sit near 1.0 while oversubscribed HBM blows up)")
+
+
+if __name__ == "__main__":
+    main()

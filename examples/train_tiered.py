@@ -1,0 +1,88 @@
+"""End-to-end tiered training driver.
+
+Trains an LM whose params + optimizer state exceed a configured fast-tier
+budget: the memtier WeightStreamer scores every leaf with the paper's
+DRAM-affinity machinery (write-intensive optimizer state pins in the fast
+tier; read-only streamed weights bypass to the host tier) and stages
+streamed leaves in/out around each jitted step — real two-tier training on
+this container (device arrays vs host numpy).
+
+Default is a ~6M-param model for a quick run; the assignment-scale run is
+
+    PYTHONPATH=src python examples/train_tiered.py --d-model 768 \
+        --layers 12 --vocab 32000 --steps 300      # ~100M params
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec, get_config
+from repro.data.synthetic import for_model
+from repro.launch import steps as steps_lib
+from repro.memtier import WeightStreamer
+from repro.models import init_params
+from repro.optim import adamw
+from repro.parallel.mesh_ctx import MeshCtx
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--fast-frac", type=float, default=0.4,
+                    help="fast-tier budget as a fraction of total state")
+    args = ap.parse_args()
+
+    base = get_config("granite-8b", smoke=True)
+    cfg = dataclasses.replace(
+        base, name="tiered", n_layers=args.layers, d_model=args.d_model,
+        n_heads=max(4, args.d_model // 64), n_kv_heads=max(2, args.d_model
+                                                           // 128),
+        d_ff=args.d_model * 4, vocab=args.vocab, head_dim=None)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(params)
+    nbytes = sum(x.size * x.dtype.itemsize
+                 for x in jax.tree.leaves({"p": params, "o": opt}))
+    nparams = sum(x.size for x in jax.tree.leaves(params))
+    budget = int(nbytes * args.fast_frac)
+    print(f"{nparams:,} params; state {nbytes/2**20:.0f} MiB; "
+          f"fast-tier budget {budget/2**20:.0f} MiB")
+
+    ws = WeightStreamer(params, opt, fast_budget_bytes=budget)
+    print(f"placement: {len(ws.placement.pinned)} leaves pinned "
+          f"({ws.placement.fast_bytes/2**20:.0f} MiB), "
+          f"{len(ws.placement.streamed)} streamed "
+          f"({ws.placement.slow_bytes/2**20:.0f} MiB)")
+
+    step = jax.jit(steps_lib.make_train_step(cfg, MeshCtx()))
+    data = for_model(cfg, args.seq, args.batch)
+    t0 = time.time()
+    for i in range(args.steps):
+        p, o = ws.stage_in(params, opt)
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        p, o, m = step(p, o, batch)
+        ws.flush_out(p, o)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {float(m['loss']):.4f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    gb_in = ws.bytes_streamed_in / 2**30
+    gb_out = ws.bytes_streamed_out / 2**30
+    print(f"streamed {gb_in:.2f} GiB in / {gb_out:.2f} GiB out over "
+          f"{args.steps} steps; pinned set never moved "
+          f"(write-filtered fast tier)")
+
+
+if __name__ == "__main__":
+    main()

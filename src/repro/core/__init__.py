@@ -1,0 +1,28 @@
+"""Track A: paper-faithful HMS / DRAM-cache model and simulator."""
+
+from .timing import (
+    COLUMN_BYTES,
+    COLUMNS_PER_ROW,
+    ROW_BYTES,
+    DeviceTiming,
+    EnergyParams,
+    HMSConfig,
+    DRAM,
+    SCM_MLC,
+    SCM_SLC,
+    SCM_TLC,
+    amil_fits_in_column,
+    metadata_bits_per_line,
+    metadata_bits_per_row,
+)
+from .traces import WORKLOADS, Trace, make_trace, preprocess
+from .simulator import SimResult, run_workload, simulate
+
+__all__ = [
+    "COLUMN_BYTES", "COLUMNS_PER_ROW", "ROW_BYTES",
+    "DeviceTiming", "EnergyParams", "HMSConfig",
+    "DRAM", "SCM_MLC", "SCM_SLC", "SCM_TLC",
+    "amil_fits_in_column", "metadata_bits_per_line", "metadata_bits_per_row",
+    "WORKLOADS", "Trace", "make_trace", "preprocess",
+    "SimResult", "run_workload", "simulate",
+]

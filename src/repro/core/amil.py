@@ -1,0 +1,95 @@
+"""AMIL (Aggregated-Metadata-In-Last-column) metadata packing.
+
+The paper stores the metadata of all cachelines in a DRAM row inside the data
+portion of the row's *last column* (Fig. 7c).  With 256 B cachelines and a
+2 KiB row this is 8 lines x 6 bits = 48 bits in a 256-bit column — one column
+access fetches every tag in the row and ECC coverage is preserved.
+
+This module is the *functional* definition of that layout: one byte per line,
+
+    bit [0:2]  tag          (2-bit for a 4x SCM:DRAM capacity ratio)
+    bit 2      valid
+    bit 3      dirty
+    bit [4:6]  DRAM-affinity level (2-bit, N_levels = 4)
+
+packed little-endian into a ``uint8[lines_per_row]`` metadata word per row.
+It is used by the Track-A simulator, serves as the oracle for the
+``kernels/amil_probe`` Pallas kernel, and by the Track-B memtier runtime
+(which packs superblock residency metadata the same way).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+TAG_SHIFT = 0
+TAG_MASK = 0b11
+VALID_SHIFT = 2
+DIRTY_SHIFT = 3
+AFF_SHIFT = 4
+AFF_MASK = 0b11
+
+
+def pack_line_meta(tag, valid, dirty, affinity):
+    """Pack per-line metadata fields into one uint8 each.
+
+    All arguments are integer/bool arrays of identical shape; broadcasting is
+    the caller's business.  ``tag`` and ``affinity`` are masked to 2 bits.
+    """
+    tag = jnp.asarray(tag).astype(jnp.uint8) & TAG_MASK
+    aff = jnp.asarray(affinity).astype(jnp.uint8) & AFF_MASK
+    v = jnp.asarray(valid).astype(jnp.uint8)
+    d = jnp.asarray(dirty).astype(jnp.uint8)
+    return (
+        (tag << TAG_SHIFT)
+        | (v << VALID_SHIFT)
+        | (d << DIRTY_SHIFT)
+        | (aff << AFF_SHIFT)
+    ).astype(jnp.uint8)
+
+
+def unpack_line_meta(meta):
+    """Inverse of :func:`pack_line_meta`; returns (tag, valid, dirty, aff)."""
+    meta = jnp.asarray(meta)
+    tag = (meta >> TAG_SHIFT) & TAG_MASK
+    valid = ((meta >> VALID_SHIFT) & 1).astype(jnp.bool_)
+    dirty = ((meta >> DIRTY_SHIFT) & 1).astype(jnp.bool_)
+    aff = (meta >> AFF_SHIFT) & AFF_MASK
+    return tag, valid, dirty, aff
+
+
+def pack_row_meta(tags, valids, dirtys, affs):
+    """Pack ``[..., lines_per_row]`` per-line fields into the AMIL word.
+
+    Returns a ``uint8[..., lines_per_row]`` array — the byte image of the
+    last-column metadata word for each row.
+    """
+    return pack_line_meta(tags, valids, dirtys, affs)
+
+
+def row_meta_to_u64(row_meta):
+    """Collapse a ``uint8[..., 8]`` AMIL word to one uint64 per row (the
+    value that physically occupies the first 8 bytes of the last column)."""
+    row_meta = row_meta.astype(jnp.uint64)
+    shifts = (jnp.arange(row_meta.shape[-1], dtype=jnp.uint64) * jnp.uint64(8))
+    return jnp.sum(row_meta << shifts, axis=-1, dtype=jnp.uint64)
+
+
+def u64_to_row_meta(word, lines_per_row: int = 8):
+    word = jnp.asarray(word, dtype=jnp.uint64)[..., None]
+    shifts = (jnp.arange(lines_per_row, dtype=jnp.uint64) * jnp.uint64(8))
+    return ((word >> shifts) & jnp.uint64(0xFF)).astype(jnp.uint8)
+
+
+def probe_row(row_meta, line_in_row, want_tag):
+    """Resolve hit/miss for ``line_in_row`` against an AMIL word.
+
+    Vectorized: ``row_meta`` is ``uint8[..., lines_per_row]``, the other two
+    broadcastable integer arrays.  Returns (hit, valid, dirty, affinity).
+    """
+    meta = jnp.take_along_axis(
+        row_meta, line_in_row[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    tag, valid, dirty, aff = unpack_line_meta(meta)
+    hit = valid & (tag == (jnp.asarray(want_tag).astype(jnp.uint8) & TAG_MASK))
+    return hit, valid, dirty, aff

@@ -1,0 +1,108 @@
+"""Configurable Tag Cache (§III-D), as a functional set-associative cache.
+
+The CTC repurposes L2 ways to cache DRAM-cache tags.  One 32 B CTC line holds
+eight 4 B *sectors*; each sector is the (AMIL-aggregated) tag bundle of one
+DRAM row.  A CTC line therefore covers a *row group* of 8 consecutive DRAM
+rows, with per-sector valid bits — this is what makes the combination with
+AMIL bandwidth-effective: a single DRAM column access refills a whole sector.
+
+State layout (all JAX arrays, scan-carried):
+    tags   int32[sets, ways]                row-group id (-1 = invalid line)
+    svalid bool [sets, ways, sectors]       per-sector valid
+    age    int32[sets, ways]                LRU ages (0 = MRU)
+
+The number of ways actually enabled is a *runtime* argument (the user-facing
+"how many L2 ways did you give the CTC" knob) so one compiled simulator can
+sweep Fig. 18 without recompiling.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+
+def init_state(sets: int, ways: int, sectors: int) -> Dict[str, jnp.ndarray]:
+    return {
+        "tags": jnp.full((sets, ways), -1, dtype=jnp.int32),
+        "svalid": jnp.zeros((sets, ways, sectors), dtype=jnp.bool_),
+        "age": jnp.zeros((sets, ways), dtype=jnp.int32),
+    }
+
+
+def _way_mask(state, enabled_ways):
+    ways = state["tags"].shape[1]
+    return jnp.arange(ways) < enabled_ways
+
+
+def probe(state, row_group, sector, enabled_ways):
+    """Look up one DRAM row's tag sector.  Returns (hit, way)."""
+    sets = state["tags"].shape[0]
+    set_idx = row_group % sets
+    line_hit = (state["tags"][set_idx] == row_group) & _way_mask(
+        state, enabled_ways
+    )
+    sector_hit = line_hit & state["svalid"][set_idx, :, sector]
+    hit = jnp.any(sector_hit)
+    way = jnp.argmax(sector_hit)
+    # A "line hit, sector miss" still reuses the allocated line.
+    line_present = jnp.any(line_hit)
+    line_way = jnp.argmax(line_hit)
+    return hit, way, line_present, line_way
+
+
+def touch(state, row_group, way):
+    """LRU update: the touched way becomes MRU."""
+    sets = state["tags"].shape[0]
+    set_idx = row_group % sets
+    ages = state["age"][set_idx]
+    my_age = ages[way]
+    ages = jnp.where(ages < my_age, ages + 1, ages)
+    ages = ages.at[way].set(0)
+    return {**state, "age": state["age"].at[set_idx].set(ages)}
+
+
+def fill(state, row_group, sector, enabled_ways):
+    """Insert/refresh the sector after a DRAM metadata fetch.
+
+    If the row group already has a line, only the sector valid bit is set;
+    otherwise the LRU way among the enabled ways is evicted.  Returns the new
+    state and the victim way used.
+    """
+    sets = state["tags"].shape[0]
+    set_idx = row_group % sets
+    mask = _way_mask(state, enabled_ways)
+
+    line_hit = (state["tags"][set_idx] == row_group) & mask
+    line_present = jnp.any(line_hit)
+    hit_way = jnp.argmax(line_hit)
+
+    # LRU victim among enabled ways.
+    ages = jnp.where(mask, state["age"][set_idx], -1)
+    lru_way = jnp.argmax(ages)
+    way = jnp.where(line_present, hit_way, lru_way)
+
+    tags = state["tags"].at[set_idx, way].set(row_group)
+    svalid_set = state["svalid"][set_idx]
+    # On a fresh allocation all sectors of the victim line are invalidated.
+    svalid_set = jnp.where(
+        line_present,
+        svalid_set,
+        svalid_set.at[way].set(jnp.zeros_like(svalid_set[way])),
+    )
+    svalid_set = svalid_set.at[way, sector].set(True)
+    svalid = state["svalid"].at[set_idx].set(svalid_set)
+
+    new = {"tags": tags, "svalid": svalid, "age": state["age"]}
+    return touch(new, row_group, way), way
+
+
+def invalidate_all(state):
+    return init_state(*state["svalid"].shape)
+
+
+def storage_overhead_bits(l2_line_bytes: int = 128, sectors: int = 8) -> int:
+    """§III-D overhead estimate: per-line valid/dirty/tag + pLRU per set."""
+    per_line = sectors + sectors + 22          # 8 valid + 8 dirty + 22b tag
+    return per_line

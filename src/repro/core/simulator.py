@@ -1,0 +1,601 @@
+"""Trace-driven HMS / DRAM-cache simulator (Track A, paper-faithful).
+
+The simulator consumes preprocessed traces (`traces.preprocess`) and models,
+per §III of the paper:
+
+  * a direct-mapped DRAM cache (configurable 64..1024 B lines) over SCM,
+  * AMIL vs TAD tag organizations and their probe-traffic costs,
+  * the Configurable Tag Cache with LRU ways + per-sector valid bits,
+  * the two-level SCM-aware bypass policy (penalty EMA filter, then victim
+    DRAM-affinity comparison with probabilistic decay),
+  * per-page activation counters,
+  * prior-work policies (BEAR_i, RedCache_i, McCache_i) and ablations,
+  * HMS shared-bus vs separate-bus organizations, SCM-only, infinite HBM,
+    and the oversubscribed-HBM Unified-Memory baseline with TBN-style
+    chunked migration over a PCIe/NVLink-class host link.
+
+Runtime is a bottleneck (roofline-style) model: the max of channel-bus
+occupancy, per-rank bank occupancy (activation/recovery amortized over the
+MSHR run), host-link occupancy, serialized fault handling, and a compute
+floor.  Counters are float64 (x64 is enabled on import: traces are ~10^6
+requests and fp32 accumulators would lose increments).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import bypass as bp
+from . import ctc as ctc_mod
+from .timing import (
+    COLUMN_BYTES,
+    COLUMNS_PER_ROW,
+    UM_PAGE_BYTES,
+    HMSConfig,
+)
+from .traces import Trace, preprocess
+
+_COUNTERS = (
+    # bus traffic, in 32B columns
+    "demand_dram_rd", "demand_dram_wr", "demand_scm_rd", "demand_scm_wr",
+    "probe_cols", "meta_wr_cols",
+    "fill_scm_rd", "fill_dram_wr", "wb_dram_rd", "wb_scm_wr",
+    # bank busy cycles (pre bank-parallelism division)
+    "dram_busy", "scm_busy",
+    # fractional activation-event counts (for energy)
+    "dram_acts", "scm_acts", "scm_wr_acts",
+    # policy events
+    "hit_r", "hit_w", "miss_r", "miss_w",
+    "bypass_l1", "bypass_l2", "fills", "dirty_evicts", "aff_decs",
+    "ctc_hit", "ctc_miss",
+)
+
+
+def _zero_counters():
+    return {k: jnp.zeros((), jnp.float64) for k in _COUNTERS}
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    config: HMSConfig
+    runtime_cycles: float
+    terms: Dict[str, float]           # bottleneck terms, cycles
+    counters: Dict[str, float]
+    traffic_bytes: Dict[str, float]   # per-category bus traffic
+    hit_rate_read: float
+    hit_rate_write: float
+    ctc_hit_rate: float
+    bypass_l1_frac: float             # fraction of bypasses decided at level 1
+    energy_pj: Dict[str, float]
+    power_w: float
+
+    @property
+    def total_traffic(self) -> float:
+        return float(sum(self.traffic_bytes.values()))
+
+
+# ---------------------------------------------------------------------------
+# The HMS scan step.
+# ---------------------------------------------------------------------------
+
+def _build_step(cfg: HMSConfig, n_pages: int):
+    dram = cfg.dram_timing
+    scm = cfg.scm_timing
+    cpl = cfg.columns_per_line
+    policy = cfg.policy
+    layout = cfg.tag_layout
+    use_ctc = policy in ("hms", "no_bypass", "no_second_level")
+    ideal_probe = policy in ("bear", "redcache", "mccache")
+    probe_cost = 1.0 if layout == "amil" else float(cfg.lines_per_row)
+    meta_wr_cost = 1.0 if layout == "amil" else 0.0
+
+    def step(carry, x):
+        cache, ctcst, act, scal, C = carry
+        (max_act, pen_ema, pen_max, aff_max, rng) = scal
+
+        slot = x["slot"]
+        tag = x["tag"]
+        is_write = x["is_write"]
+        page = x["page"]
+        run_start = x["run_start"]
+        ncols = x["run_ncols"]
+        haswrite = x["run_haswrite"]
+        excluded = x["amil_excluded"] & (layout == "amil")
+
+        def add(name, v):
+            C[name] = C[name] + jnp.asarray(v, jnp.float64)
+
+        # -- activation counter (2 MiB-grain analogue) ---------------------
+        act = act.at[page].add(run_start.astype(jnp.int32))
+        page_act = act[page]
+        max_act = jnp.maximum(max_act, page_act.astype(jnp.float64))
+
+        # -- DRAM cache lookup ---------------------------------------------
+        hit = cache["valid"][slot] & (cache["tags"][slot] == tag)
+
+        # -- CTC -------------------------------------------------------------
+        if use_ctc:
+            c_hit, way, line_present, line_way = ctc_mod.probe(
+                ctcst, x["row_group"], x["sector"], cfg.ctc_ways
+            )
+            add("ctc_hit", c_hit)
+            add("ctc_miss", ~c_hit)
+            # CTC miss -> DRAM metadata fetch (1 col AMIL, 8 cols TAD) and
+            # sector fill.  The activation is charged standalone.
+            add("probe_cols", jnp.where(c_hit, 0.0, probe_cost))
+            add("dram_busy",
+                jnp.where(c_hit, 0.0, dram.rcd + probe_cost + dram.rp))
+            add("dram_acts", jnp.where(c_hit, 0.0, 1.0))
+            new_ctc, _ = ctc_mod.fill(
+                ctcst, x["row_group"], x["sector"], cfg.ctc_ways
+            )
+            touched = ctc_mod.touch(ctcst, x["row_group"], way)
+            ctcst = jax.tree.map(
+                lambda a, b: jnp.where(c_hit, a, b), touched, new_ctc
+            )
+        elif ideal_probe:
+            c_hit = jnp.asarray(True)
+        else:
+            # No CTC: every L2 miss probes DRAM for the tag.
+            c_hit = jnp.asarray(False)
+            add("ctc_miss", 1.0)
+            add("probe_cols", probe_cost)
+            add("dram_busy", dram.rcd + probe_cost + dram.rp)
+            add("dram_acts", 1.0)
+
+        # -- SCM penalty / affinity scores ----------------------------------
+        pen = bp.scm_penalty_score(ncols, haswrite, dram, scm)
+        pen_max = jnp.maximum(pen_max, pen.astype(jnp.float64))
+        pen_ema = bp.ema_update(pen_ema, pen.astype(jnp.float64),
+                                cfg.ema_weight)
+        req_lvl = bp.discretize(pen, pen_max, cfg.n_levels)
+        avg_lvl = bp.discretize(pen_ema, pen_max, cfg.n_levels)
+
+        aff = bp.affinity_score(pen, page_act, cfg.use_activation_counter)
+        aff_max = jnp.maximum(aff_max, aff.astype(jnp.float64))
+        req_aff_lvl = bp.discretize(aff, aff_max, cfg.n_levels)
+
+        victim_valid = cache["valid"][slot]
+        victim_dirty = cache["dirty"][slot] & victim_valid
+        victim_aff = cache["aff"][slot]
+
+        rng = bp.xorshift32(rng)
+        dice = bp.uniform01(rng)
+
+        # -- fill / bypass decision -----------------------------------------
+        miss = ~hit
+        if policy in ("hms", "no_second_level"):
+            pass1 = req_lvl > avg_lvl          # level-1 survivor
+            add("bypass_l1", miss & ~excluded & ~pass1)
+            if policy == "hms":
+                accept = (~victim_valid) | (req_aff_lvl > victim_aff)
+                # Reading the victim's affinity is free when the metadata
+                # word was just fetched on a CTC miss; otherwise it costs
+                # one extra DRAM metadata column.
+                need_aff_read = miss & pass1 & ~excluded & c_hit & victim_valid
+                add("probe_cols", need_aff_read)
+                add("dram_busy",
+                    jnp.where(need_aff_read, dram.rcd + 1.0 + dram.rp, 0.0))
+                add("dram_acts", need_aff_read)
+            else:
+                accept = jnp.asarray(True)
+            do_fill = miss & ~excluded & pass1 & accept
+            rejected = miss & ~excluded & pass1 & ~accept
+            add("bypass_l2", rejected)
+            # probabilistic decay of the victim's affinity level
+            dec = rejected & victim_valid & (dice < bp.p_dec(page_act, max_act))
+            add("aff_decs", dec)
+        elif policy in ("no_bypass", "no_bypass_no_ctc", "always_cache"):
+            do_fill = miss & ~excluded
+            dec = jnp.asarray(False)
+        elif policy == "bear":
+            do_fill = miss & (dice < cfg.bear_fill_prob)
+            dec = jnp.asarray(False)
+        elif policy == "redcache":
+            do_fill = miss & (page_act >= cfg.redcache_threshold)
+            dec = jnp.asarray(False)
+        elif policy == "mccache":
+            do_fill = miss & ~is_write
+            dec = jnp.asarray(False)
+        else:
+            raise ValueError(policy)
+
+        # -- demand service ---------------------------------------------------
+        mc_wt = policy == "mccache"   # write-through writes (static)
+        dirty_ok = jnp.asarray(not mc_wt)
+        rd = ~is_write
+        # hits
+        add("hit_r", hit & rd)
+        add("hit_w", hit & is_write)
+        add("miss_r", miss & rd)
+        add("miss_w", miss & is_write)
+        add("demand_dram_rd", hit & rd)
+        add("demand_dram_wr", hit & is_write)
+        # per-column amortized activation + recovery shares
+        dram_share = (dram.rcd + dram.rp) / ncols + jnp.where(
+            is_write, dram.wr / ncols, 0.0
+        )
+        scm_share = (scm.rcd + scm.rp) / ncols + jnp.where(
+            is_write, scm.wr / ncols, 0.0
+        )
+        add("dram_busy", jnp.where(hit, 1.0 + dram_share, 0.0))
+        add("dram_acts", jnp.where(hit, 1.0 / ncols, 0.0))
+        if mc_wt:
+            # write-through: the write also goes to SCM
+            wt = hit & is_write
+            add("demand_scm_wr", wt)
+            add("scm_busy", jnp.where(wt, 1.0 + scm_share, 0.0))
+            add("scm_acts", jnp.where(wt, 1.0 / ncols, 0.0))
+            add("scm_wr_acts", jnp.where(wt, 1.0 / ncols, 0.0))
+
+        # misses: demand from SCM unless the fill itself delivers the line
+        dem_scm_rd = miss & rd & ~do_fill
+        dem_scm_wr = miss & is_write & ~do_fill
+        add("demand_scm_rd", dem_scm_rd)
+        add("demand_scm_wr", dem_scm_wr)
+        add("scm_busy",
+            jnp.where(dem_scm_rd | dem_scm_wr, 1.0 + scm_share, 0.0))
+        add("scm_acts", jnp.where(dem_scm_rd | dem_scm_wr, 1.0 / ncols, 0.0))
+        add("scm_wr_acts", jnp.where(dem_scm_wr, 1.0 / ncols, 0.0))
+
+        # fills: read full line from SCM, write it to DRAM (+ metadata col)
+        add("fills", do_fill)
+        add("fill_scm_rd", jnp.where(do_fill, float(cpl), 0.0))
+        add("fill_dram_wr", jnp.where(do_fill, float(cpl), 0.0))
+        add("meta_wr_cols", jnp.where(do_fill, meta_wr_cost, 0.0))
+        add("scm_busy",
+            jnp.where(do_fill, scm.rcd + cpl + scm.rp, 0.0))
+        add("dram_busy",
+            jnp.where(do_fill, dram.rcd + cpl + dram.wr + dram.rp
+                      + meta_wr_cost, 0.0))
+        add("scm_acts", do_fill)
+        add("dram_acts", do_fill)
+
+        # dirty-victim writeback: DRAM line read + SCM line write
+        wb = do_fill & victim_dirty
+        add("dirty_evicts", wb)
+        add("wb_dram_rd", jnp.where(wb, float(cpl), 0.0))
+        add("wb_scm_wr", jnp.where(wb, float(cpl), 0.0))
+        add("dram_busy", jnp.where(wb, dram.rcd + cpl + dram.rp, 0.0))
+        add("scm_busy", jnp.where(wb, scm.rcd + cpl + scm.wr + scm.rp, 0.0))
+        add("dram_acts", wb)
+        add("scm_acts", wb)
+        add("scm_wr_acts", wb)
+
+        # -- cache state update ----------------------------------------------
+        set_dirty = (hit | do_fill) & is_write & dirty_ok
+        tags = cache["tags"].at[slot].set(
+            jnp.where(do_fill, tag, cache["tags"][slot]))
+        valid = cache["valid"].at[slot].set(cache["valid"][slot] | do_fill)
+        dirty = cache["dirty"].at[slot].set(
+            jnp.where(do_fill, set_dirty,
+                      cache["dirty"][slot] | (hit & is_write & dirty_ok)))
+        affn = cache["aff"].at[slot].set(
+            jnp.where(
+                do_fill,
+                req_aff_lvl,
+                jnp.maximum(cache["aff"][slot] - dec.astype(jnp.int32), 0),
+            )
+        )
+        cache = {"tags": tags, "valid": valid, "dirty": dirty, "aff": affn}
+
+        scal = (max_act, pen_ema, pen_max, aff_max, rng)
+        return (cache, ctcst, act, scal, C), None
+
+    return step
+
+
+def _run_hms_scan(trace: Trace, cfg: HMSConfig, pre) -> Dict[str, float]:
+    n_pages = int(pre["n_pages"])
+    cache = {
+        "tags": jnp.full((cfg.num_lines,), -1, jnp.int32),
+        "valid": jnp.zeros((cfg.num_lines,), jnp.bool_),
+        "dirty": jnp.zeros((cfg.num_lines,), jnp.bool_),
+        "aff": jnp.zeros((cfg.num_lines,), jnp.int32),
+    }
+    ctcst = ctc_mod.init_state(
+        cfg.ctc_sets, cfg.ctc_ways, cfg.ctc_sectors_per_line
+    )
+    act = jnp.zeros((n_pages,), jnp.int32)
+    scal = (
+        jnp.zeros((), jnp.float64),    # max_act
+        jnp.zeros((), jnp.float64),    # pen_ema
+        jnp.zeros((), jnp.float64),    # pen_max
+        jnp.zeros((), jnp.float64),    # aff_max
+        jnp.asarray(0x9E3779B9, jnp.uint32),
+    )
+    xs = {
+        k: jnp.asarray(pre[k])
+        for k in (
+            "slot", "tag", "is_write", "page", "run_start", "run_ncols",
+            "run_haswrite", "amil_excluded", "row_group", "sector",
+        )
+    }
+    step = _build_step(cfg, n_pages)
+    init = (cache, ctcst, act, scal, _zero_counters())
+    (cache, ctcst, act, scal, C), _ = jax.lax.scan(step, init, xs)
+    return {k: float(v) for k, v in C.items()}
+
+
+# ---------------------------------------------------------------------------
+# Vectorized single-tier models (InfHBM / SCM-only).
+# ---------------------------------------------------------------------------
+
+def _single_tier_counters(trace: Trace, cfg: HMSConfig, device) -> Dict[str, float]:
+    pre = preprocess(trace, cfg)
+    ncols = pre["run_ncols"]
+    is_write = pre["is_write"]
+    share = (device.rcd + device.rp) / ncols + np.where(
+        is_write, device.wr / ncols, 0.0
+    )
+    busy = float(np.sum(1.0 + share))
+    acts = float(np.sum(1.0 / ncols))
+    C = {k: 0.0 for k in _COUNTERS}
+    C["demand_dram_rd" if device.rcd <= 20 else "demand_scm_rd"] = float(
+        np.sum(~is_write))
+    C["demand_dram_wr" if device.rcd <= 20 else "demand_scm_wr"] = float(
+        np.sum(is_write))
+    if device.rcd <= 20:
+        C["dram_busy"] = busy
+        C["dram_acts"] = acts
+    else:
+        C["scm_busy"] = busy
+        C["scm_acts"] = acts
+        C["scm_wr_acts"] = float(np.sum(is_write / ncols))
+    return C
+
+
+# ---------------------------------------------------------------------------
+# Oversubscribed-HBM Unified-Memory baseline.
+# ---------------------------------------------------------------------------
+
+def _run_um(trace: Trace, cfg: HMSConfig, nvlink: bool = False):
+    """Page-granular UM simulation: FIFO frames + TBN-style chunk migration.
+
+    Returns (faults, migrated_pages, writeback_pages, remote_cols).
+    """
+    page = (trace.col * COLUMN_BYTES) // UM_PAGE_BYTES
+    is_write = trace.is_write
+    n_pages = int(page.max(initial=0)) + 1
+    n_frames = max(1, cfg.hbm_capacity // UM_PAGE_BYTES)
+    chunk = cfg.um_prefetch_pages
+
+    if n_frames >= n_pages:
+        return 0, 0, 0, 0
+
+    page_j = jnp.asarray(page.astype(np.int32))
+    wr_j = jnp.asarray(is_write)
+
+    def step(carry, x):
+        resident, dirty, frames, ptr, f, mig, wb, rem, hotness = carry
+        p, w = x
+        hotness = hotness.at[p].add(1)
+        is_res = resident[p]
+
+        if nvlink:
+            # Access-counter migration: cold pages are accessed remotely in
+            # cacheline granularity; pages crossing the hotness threshold
+            # migrate (no fault stall on hardware-coherent links).
+            migrate = (~is_res) & (hotness[p] >= 4)
+            remote = (~is_res) & ~migrate
+            rem = rem + remote
+            mchunk = 1
+            fault = migrate
+        else:
+            fault = ~is_res
+            migrate = fault
+            mchunk = chunk
+            remote = jnp.asarray(False)
+
+        f = f + fault
+
+        def do_migrate(args):
+            resident, dirty, frames, ptr, mig, wb = args
+            base = (p // mchunk) * mchunk
+            idx = base + jnp.arange(mchunk, dtype=jnp.int32)
+            idx = jnp.clip(idx, 0, n_pages - 1).astype(jnp.int32)
+            newly = ~resident[idx]
+            mig_n = jnp.sum(newly)
+            # Evict as many frames as we bring in.  CLOCK-flavoured: scan a
+            # window of 4x chunk candidates from the hand and prefer cold
+            # (low-hotness) victims, approximating UM's pre-eviction policy
+            # (plain FIFO thrashes hot pages and wildly over-penalizes
+            # oversubscription relative to the paper's measurements).
+            window = 4 * mchunk
+            cand_idx = (ptr + jnp.arange(window, dtype=jnp.int32)) % n_frames
+            cand_pages = frames[cand_idx]
+            cand_hot = jnp.where(cand_pages >= 0,
+                                 hotness[jnp.maximum(cand_pages, 0)], 0)
+            order = jnp.argsort(cand_hot)           # coldest first
+            ev_slot = cand_idx[order[:mchunk]]
+            ev_pages = frames[ev_slot]
+            ev_valid = (ev_pages >= 0) & newly      # evict one per new page
+            wb_n = jnp.sum(jnp.where(ev_valid, dirty[ev_pages], False))
+            resident = resident.at[ev_pages].set(
+                jnp.where(ev_valid, False, resident[ev_pages]))
+            dirty = dirty.at[ev_pages].set(
+                jnp.where(ev_valid, False, dirty[ev_pages]))
+            resident = resident.at[idx].set(True)
+            frames = frames.at[ev_slot].set(jnp.where(newly, idx, ev_pages))
+            ptr2 = ((ptr + mig_n) % n_frames).astype(jnp.int32)
+            return resident, dirty, frames, ptr2, mig + mig_n, wb + wb_n
+
+        resident, dirty, frames, ptr, mig, wb = jax.lax.cond(
+            migrate,
+            do_migrate,
+            lambda a: a,
+            (resident, dirty, frames, ptr, mig, wb),
+        )
+        dirty = dirty.at[p].set(dirty[p] | (w & resident[p]))
+        return (resident, dirty, frames, ptr, f, mig, wb, rem, hotness), None
+
+    init = (
+        jnp.zeros((n_pages,), jnp.bool_),
+        jnp.zeros((n_pages,), jnp.bool_),
+        jnp.full((n_frames,), -1, jnp.int32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int64),
+        jnp.zeros((), jnp.int64),
+        jnp.zeros((), jnp.int64),
+        jnp.zeros((), jnp.int64),
+        jnp.zeros((n_pages,), jnp.int32),
+    )
+    (res, dirty, frames, ptr, f, mig, wb, rem, hot), _ = jax.lax.scan(
+        step, init, (page_j, wr_j)
+    )
+    return int(f), int(mig), int(wb), int(rem)
+
+
+# ---------------------------------------------------------------------------
+# Runtime model + energy.
+# ---------------------------------------------------------------------------
+
+def _bus_cols(C: Dict[str, float]):
+    dram_cols = (C["demand_dram_rd"] + C["demand_dram_wr"] + C["probe_cols"]
+                 + C["meta_wr_cols"] + C["fill_dram_wr"] + C["wb_dram_rd"])
+    scm_cols = (C["demand_scm_rd"] + C["demand_scm_wr"] + C["fill_scm_rd"]
+                + C["wb_scm_wr"])
+    return dram_cols, scm_cols
+
+
+def _energy(C: Dict[str, float], cfg: HMSConfig, link_bytes: float):
+    e = cfg.energy
+    row_bits = 2048 * 8
+    col_bits = COLUMN_BYTES * 8
+    dram_cols, scm_cols = _bus_cols(C)
+    dram_rd_cols = (C["demand_dram_rd"] + C["probe_cols"] + C["wb_dram_rd"])
+    dram_wr_cols = (C["demand_dram_wr"] + C["meta_wr_cols"]
+                    + C["fill_dram_wr"])
+    scm_rd_cols = C["demand_scm_rd"] + C["fill_scm_rd"]
+    scm_wr_cols = C["demand_scm_wr"] + C["wb_scm_wr"]
+    out = {
+        "dram_act": C["dram_acts"] * row_bits * (e.dram_act + e.dram_pre),
+        "dram_rw": col_bits * (dram_rd_cols * e.dram_rd
+                               + dram_wr_cols * e.dram_wr),
+        "scm_act": C["scm_acts"] * row_bits * e.scm_act
+        + C["scm_wr_acts"] * row_bits * e.scm_pre_wr,
+        "scm_rw": col_bits * (scm_rd_cols * e.scm_rd + scm_wr_cols * e.scm_wr),
+        "link": link_bytes * 8 * e.link_pj_per_bit,
+    }
+    return out
+
+
+def _finish(name, cfg, C, link_bytes=0.0, fault_cycles=0.0,
+            n_requests=1) -> SimResult:
+    dram_cols, scm_cols = _bus_cols(C)
+    banks = cfg.channels * cfg.banks_per_channel
+    if cfg.organization == "separate":
+        bus = max(dram_cols, scm_cols) / max(1, cfg.channels // 2)
+        dram_bank = C["dram_busy"] / (banks // 2)
+        scm_bank = C["scm_busy"] / (banks // 2)
+    else:
+        bus = (dram_cols + scm_cols) / cfg.channels
+        dram_bank = C["dram_busy"] / banks
+        scm_bank = C["scm_busy"] / banks
+    link_cycles = link_bytes / cfg.link_bw_gbps  # 1 GHz: GB/s == B/cycle
+    compute = n_requests * cfg.compute_cycles_per_request
+    terms = {
+        "bus": bus,
+        "dram_bank": dram_bank,
+        "scm_bank": scm_bank,
+        "link": link_cycles,
+        "fault": fault_cycles,
+        "compute": compute,
+    }
+    runtime = max(bus, dram_bank, scm_bank, link_cycles, compute) + fault_cycles
+    traffic = {
+        "dram_demand": (C["demand_dram_rd"] + C["demand_dram_wr"])
+        * COLUMN_BYTES,
+        "dram_probe": (C["probe_cols"] + C["meta_wr_cols"]) * COLUMN_BYTES,
+        "dram_fill": C["fill_dram_wr"] * COLUMN_BYTES,
+        "dram_wb_rd": C["wb_dram_rd"] * COLUMN_BYTES,
+        "scm_demand": (C["demand_scm_rd"] + C["demand_scm_wr"])
+        * COLUMN_BYTES,
+        "scm_fill_rd": C["fill_scm_rd"] * COLUMN_BYTES,
+        "scm_wb_wr": C["wb_scm_wr"] * COLUMN_BYTES,
+        "link": link_bytes,
+    }
+    energy = _energy(C, cfg, link_bytes)
+    tot_r = C["hit_r"] + C["miss_r"]
+    tot_w = C["hit_w"] + C["miss_w"]
+    tot_ctc = C["ctc_hit"] + C["ctc_miss"]
+    tot_byp = C["bypass_l1"] + C["bypass_l2"]
+    power = sum(energy.values()) / max(runtime, 1.0) * 1e-3  # pJ/ns -> W
+    return SimResult(
+        name=name,
+        config=cfg,
+        runtime_cycles=float(runtime),
+        terms={k: float(v) for k, v in terms.items()},
+        counters={k: float(v) for k, v in C.items()},
+        traffic_bytes={k: float(v) for k, v in traffic.items()},
+        hit_rate_read=float(C["hit_r"] / tot_r) if tot_r else 0.0,
+        hit_rate_write=float(C["hit_w"] / tot_w) if tot_w else 0.0,
+        ctc_hit_rate=float(C["ctc_hit"] / tot_ctc) if tot_ctc else 1.0,
+        bypass_l1_frac=float(C["bypass_l1"] / tot_byp) if tot_byp else 0.0,
+        energy_pj={k: float(v) for k, v in energy.items()},
+        power_w=float(power),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Public entry point.
+# ---------------------------------------------------------------------------
+
+def simulate(trace: Trace, cfg: HMSConfig, nvlink: bool = False) -> SimResult:
+    """Simulate ``trace`` on the memory system described by ``cfg``."""
+    cfg = cfg.validate()
+    org = cfg.organization
+
+    if org == "inf_hbm":
+        C = _single_tier_counters(trace, cfg, cfg.dram_timing)
+        return _finish(trace.name, cfg, C, n_requests=trace.n)
+
+    if org == "scm":
+        C = _single_tier_counters(trace, cfg, cfg.scm_timing)
+        return _finish(trace.name, cfg, C, n_requests=trace.n)
+
+    if org == "hbm":
+        # Oversubscribed HBM + UM over the host link.
+        C = _single_tier_counters(trace, cfg, cfg.dram_timing)
+        faults, mig, wb, remote = _run_um(trace, cfg, nvlink=nvlink)
+        link_bytes = (mig + wb) * UM_PAGE_BYTES + remote * COLUMN_BYTES
+        fault_cycles = (0.0 if nvlink
+                        else faults * cfg.fault_latency_ns / cfg.fault_overlap)
+        return _finish(trace.name, cfg, C, link_bytes=link_bytes,
+                       fault_cycles=fault_cycles, n_requests=trace.n)
+
+    # hms / separate
+    pre = preprocess(trace, cfg)
+    C = _run_hms_scan(trace, cfg, pre)
+    fault_cycles = 0.0
+    link_bytes = 0.0
+    if trace.footprint > cfg.scm_capacity + cfg.dram_cache_capacity:
+        # HMS itself oversubscribed (Fig. 17's rel-footprint 4.0 case):
+        # UM faults against the *SCM* capacity on top of the cache model.
+        big = dataclasses.replace(
+            cfg, r_hbm=(cfg.scm_capacity + cfg.dram_cache_capacity)
+            / trace.footprint)
+        faults, mig, wb, remote = _run_um(trace, big, nvlink=nvlink)
+        link_bytes = (mig + wb) * UM_PAGE_BYTES + remote * COLUMN_BYTES
+        fault_cycles = (0.0 if nvlink
+                        else faults * cfg.fault_latency_ns / cfg.fault_overlap)
+    return _finish(trace.name, cfg, C, link_bytes=link_bytes,
+                   fault_cycles=fault_cycles, n_requests=trace.n)
+
+
+def run_workload(name: str, cfg: HMSConfig, n: int | None = None,
+                 nvlink: bool = False) -> SimResult:
+    from .traces import make_trace
+
+    trace = make_trace(name, n=n)
+    cfg = dataclasses.replace(cfg, footprint=trace.footprint)
+    return simulate(trace, cfg, nvlink=nvlink)

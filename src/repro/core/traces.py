@@ -1,0 +1,358 @@
+"""Workload access-trace generators + trace preprocessing.
+
+Track A of the reproduction is trace-driven: each generator emits a stream of
+L2-miss-level memory requests at 32 B column granularity, modeled after the
+access-pattern classes of the paper's workload suite (Rodinia / Pannotia /
+GraphBIG / Polybench / LLM layers):
+
+  regular/streaming  : stencil, hotspot3D, 2DConv, pathfinder
+  irregular/graph    : bfs, sssp (write-heavy, random), kcore, color, qc
+  zipfian mixed      : synthetic hot/cold
+  LLM                : bert_layer inference, gpt_layer training step,
+                       llm_decode (weights + paged KV appends)
+
+The generators are NumPy (host-side data plumbing); the simulator itself is
+JAX.  ``preprocess`` performs the vectorized run segmentation that stands in
+for the MSHR's per-row coalescing window (§III-C1): consecutive requests to
+the same SCM row form one activation run; the run's column count and
+write-presence feed Eq. 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import numpy as np
+
+from .timing import COLUMN_BYTES, COLUMNS_PER_ROW, HMSConfig
+
+MiB = 1024 * 1024
+
+
+@dataclasses.dataclass
+class Trace:
+    name: str
+    col: np.ndarray        # int64 global column index
+    is_write: np.ndarray   # bool
+    footprint: int         # bytes
+
+    def __post_init__(self):
+        assert self.col.ndim == 1 and self.col.shape == self.is_write.shape
+        limit = self.footprint // COLUMN_BYTES
+        assert int(self.col.max(initial=0)) < limit, (
+            f"trace {self.name} exceeds footprint"
+        )
+
+    @property
+    def n(self) -> int:
+        return int(self.col.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Generators.  All take (footprint_bytes, n, seed) and return a Trace.
+# ---------------------------------------------------------------------------
+
+def _cols(footprint):
+    return footprint // COLUMN_BYTES
+
+
+def gen_streaming_read(footprint=16 * MiB, n=200_000, seed=0, name="stream_r"):
+    """2DConv-like: sequential sweeps, read-dominant, near-perfect locality."""
+    rng = np.random.default_rng(seed)
+    total = _cols(footprint)
+    start = rng.integers(0, total, size=1)[0]
+    col = (start + np.arange(n)) % total
+    wr = np.zeros(n, dtype=bool)
+    wr[::16] = True     # occasional result write
+    return Trace(name, col.astype(np.int64), wr, footprint)
+
+
+def gen_stencil(footprint=24 * MiB, n=240_000, seed=0, name="stencil"):
+    """hotspot3D-like: plane sweeps reading z+/-1 neighbours, writing center.
+
+    Three interleaved streams at plane stride + a write stream: high row
+    locality but large working set per iteration -> thrashes small caches.
+    """
+    total = _cols(footprint)
+    plane = max(COLUMNS_PER_ROW * 64, total // 64)
+    base = np.arange(n // 4, dtype=np.int64)
+    streams = [
+        (base % total, False),
+        ((base + plane) % total, False),
+        ((base + 2 * plane) % total, False),
+        ((base + plane) % total, True),      # center write
+    ]
+    col = np.empty(n, dtype=np.int64)
+    wr = np.empty(n, dtype=bool)
+    for i, (c, w) in enumerate(streams):
+        col[i::4] = c[: n // 4]
+        wr[i::4] = w
+    return Trace(name, col, wr, footprint)
+
+
+def gen_pathfinder(footprint=12 * MiB, n=160_000, seed=0, name="pathfnd"):
+    """Row-wise dynamic programming: stream row i and i-1, write row i."""
+    total = _cols(footprint)
+    rowlen = COLUMNS_PER_ROW * 32
+    base = np.arange(n // 3, dtype=np.int64)
+    col = np.empty(n // 3 * 3, dtype=np.int64)
+    wr = np.empty(col.shape[0], dtype=bool)
+    col[0::3] = base % total
+    wr[0::3] = False
+    col[1::3] = (base + rowlen) % total
+    wr[1::3] = False
+    col[2::3] = (base + rowlen) % total
+    wr[2::3] = True
+    return Trace(name, col, wr, footprint)
+
+
+def _powerlaw_nodes(rng, n_nodes, n, alpha=1.1):
+    """Zipf-ish node sampling typical of scale-free graph frontiers."""
+    ranks = rng.zipf(alpha, size=4 * n)
+    ranks = ranks[ranks <= n_nodes][:n]
+    while ranks.shape[0] < n:
+        extra = rng.zipf(alpha, size=2 * n)
+        extra = extra[extra <= n_nodes]
+        ranks = np.concatenate([ranks, extra])[:n]
+    perm_seed = rng.integers(0, 2**31)
+    # Pseudo-random node permutation via an affine map (avoids a huge perm).
+    a = 2 * rng.integers(1, n_nodes // 2, dtype=np.int64) + 1
+    b = rng.integers(0, n_nodes, dtype=np.int64)
+    return (a * ranks.astype(np.int64) + b) % n_nodes
+
+
+def gen_bfs(footprint=32 * MiB, n=240_000, seed=0, name="bfs",
+            write_frac=0.08, burst=4):
+    """BFS: random frontier expansion over a CSR graph.
+
+    Reads of a node's adjacency list are short sequential bursts at a random
+    base (some spatial locality *within* a warp's neighbour fetch), visited[]
+    updates are sparse random writes.
+    """
+    rng = np.random.default_rng(seed)
+    total = _cols(footprint)
+    n_nodes = total // burst
+    nodes = _powerlaw_nodes(rng, n_nodes, n // burst)
+    base = nodes * burst
+    col = (base[:, None] + np.arange(burst)[None, :]).reshape(-1) % total
+    wr = rng.random(col.shape[0]) < write_frac
+    return Trace(name, col.astype(np.int64), wr, footprint)
+
+
+def gen_sssp(footprint=32 * MiB, n=240_000, seed=0, name="sssp"):
+    """SSSP: like BFS but with frequent random distance-array writes and
+    almost no spatial locality on the write stream (the paper's worst case
+    for SCM: 'frequently accessed with little row buffer locality for
+    writes')."""
+    rng = np.random.default_rng(seed)
+    total = _cols(footprint)
+    reads = gen_bfs(footprint, (n * 3) // 4, seed, burst=3).col
+    n_wr = n - reads.shape[0]
+    wr_nodes = _powerlaw_nodes(rng, total, n_wr) % total
+    col = np.empty(n, dtype=np.int64)
+    wr = np.empty(n, dtype=bool)
+    col[: reads.shape[0]] = reads
+    wr[: reads.shape[0]] = False
+    col[reads.shape[0]:] = wr_nodes
+    wr[reads.shape[0]:] = True
+    # Interleave reads and writes.
+    perm = rng.permutation(n)
+    return Trace(name, col[perm], wr[perm], footprint)
+
+
+def gen_kcore(footprint=28 * MiB, n=200_000, seed=1, name="kcore"):
+    t = gen_bfs(footprint, n, seed, name=name, write_frac=0.15, burst=2)
+    return t
+
+
+def gen_color(footprint=24 * MiB, n=200_000, seed=2, name="clr"):
+    t = gen_bfs(footprint, n, seed, name=name, write_frac=0.05, burst=6)
+    return t
+
+
+def gen_zipf_mixed(footprint=16 * MiB, n=200_000, seed=3, name="zipf",
+                   write_frac=0.3):
+    """Synthetic hot/cold: a small hot set absorbs most accesses."""
+    rng = np.random.default_rng(seed)
+    total = _cols(footprint)
+    hot = total // 16
+    is_hot = rng.random(n) < 0.8
+    col = np.where(
+        is_hot,
+        rng.integers(0, hot, size=n),
+        rng.integers(hot, total, size=n),
+    )
+    wr = rng.random(n) < write_frac
+    return Trace(name, col.astype(np.int64), wr, footprint)
+
+
+def gen_bert_layer(footprint=24 * MiB, n=220_000, seed=4, name="bert_inf"):
+    """BERT-style inference layer: stream weights (read), write activations.
+
+    Weights: large sequential read region reused every 'layer iteration';
+    activations: smaller region, written then read back.
+    """
+    total = _cols(footprint)
+    w_region = int(total * 0.8)
+    a_region = total - w_region
+    iters = 6
+    per = n // iters
+    chunks = []
+    for it in range(iters):
+        wcols = (np.arange(per * 3 // 4, dtype=np.int64) * max(
+            1, w_region // (per * 3 // 4))) % w_region
+        awr = np.arange(per // 8, dtype=np.int64) % a_region + w_region
+        ard = awr.copy()
+        c = np.concatenate([wcols, awr, ard])
+        w = np.concatenate([
+            np.zeros(wcols.shape[0], bool),
+            np.ones(awr.shape[0], bool),
+            np.zeros(ard.shape[0], bool),
+        ])
+        chunks.append((c, w))
+    col = np.concatenate([c for c, _ in chunks])
+    wr = np.concatenate([w for _, w in chunks])
+    return Trace(name, col, wr, footprint)
+
+
+def gen_gpt_train(footprint=32 * MiB, n=260_000, seed=5, name="gpt_train"):
+    """GPT training step: fwd weight stream, bwd weight re-stream + grad and
+    optimizer-state read-modify-writes (write-heavy tail per layer)."""
+    total = _cols(footprint)
+    w = int(total * 0.45)          # params
+    g = int(total * 0.25)          # grads
+    o = total - w - g              # optimizer state
+    per = n // 3
+    fwd = np.arange(per, dtype=np.int64) * max(1, w // per) % w
+    bwd = fwd[::-1].copy()
+    opt_rd = (np.arange(per // 2, dtype=np.int64) * 2) % o + w + g
+    opt_wr = opt_rd.copy()
+    grad_wr = np.arange(per // 2, dtype=np.int64) % g + w
+    col = np.concatenate([fwd, bwd, grad_wr, opt_rd, opt_wr])
+    wr = np.concatenate([
+        np.zeros(per, bool), np.zeros(per, bool),
+        np.ones(per // 2, bool), np.zeros(per // 2, bool),
+        np.ones(per // 2, bool),
+    ])
+    return Trace(name, col, wr, footprint)
+
+
+def gen_llm_decode(footprint=24 * MiB, n=220_000, seed=6, name="llm_dec"):
+    """Autoregressive decode: weights streamed per token (read, sequential),
+    KV cache appended (small writes) and scanned (reads, growing region)."""
+    rng = np.random.default_rng(seed)
+    total = _cols(footprint)
+    w = int(total * 0.7)
+    kv = total - w
+    toks = 24
+    per = n // toks
+    chunks = []
+    for t in range(toks):
+        wcols = (np.arange(per * 5 // 8, dtype=np.int64)
+                 * max(1, w // (per * 5 // 8))) % w
+        kv_len = max(16, int(kv * (t + 1) / toks))
+        kvr = rng.integers(0, kv_len, size=per // 4).astype(np.int64) + w
+        kvw = (np.arange(per // 8, dtype=np.int64) % kv) + w
+        c = np.concatenate([wcols, kvr, kvw])
+        wmask = np.concatenate([
+            np.zeros(wcols.shape[0], bool),
+            np.zeros(kvr.shape[0], bool),
+            np.ones(kvw.shape[0], bool),
+        ])
+        chunks.append((c, wmask))
+    col = np.concatenate([c for c, _ in chunks])
+    wr = np.concatenate([m for _, m in chunks])
+    return Trace(name, col, wr, footprint)
+
+
+WORKLOADS: Dict[str, Callable[..., Trace]] = {
+    "stream_r": gen_streaming_read,
+    "stencil": gen_stencil,
+    "pathfnd": gen_pathfinder,
+    "bfs_tu": lambda **kw: gen_bfs(name="bfs_tu", seed=10, **kw),
+    "bfs_ta": lambda **kw: gen_bfs(name="bfs_ta", seed=11, burst=8, **kw),
+    "sssp_ttc": lambda **kw: gen_sssp(name="sssp_ttc", seed=12, **kw),
+    "kcore": gen_kcore,
+    "clr": gen_color,
+    "zipf": gen_zipf_mixed,
+    "bert_inf": gen_bert_layer,
+    "gpt_train": gen_gpt_train,
+    "llm_dec": gen_llm_decode,
+}
+
+
+def make_trace(name: str, scale: float = 1.0, n: int | None = None) -> Trace:
+    gen = WORKLOADS[name]
+    kw = {}
+    if n is not None:
+        kw["n"] = n
+    t = gen(**kw)
+    if scale != 1.0:
+        fp = int(t.footprint * scale)
+        kw["footprint"] = max(2 * MiB, fp)
+        t = gen(**kw)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Preprocessing: MSHR-window run segmentation + address decomposition.
+# ---------------------------------------------------------------------------
+
+def preprocess(trace: Trace, cfg: HMSConfig) -> Dict[str, np.ndarray]:
+    """Decompose addresses and segment the trace into row-activation runs.
+
+    Returns a dict of per-request arrays consumed by the simulator scan.
+    Runs are maximal stretches of consecutive requests touching the same SCM
+    row — the paper's MSHR records exactly this (8-bit column mask + write
+    bit per in-flight cacheline, §IV-F).
+    """
+    col = trace.col.astype(np.int64)
+    is_write = trace.is_write.astype(bool)
+
+    cpl = cfg.columns_per_line
+    lpr = cfg.lines_per_row
+    num_lines = cfg.num_lines
+
+    line = col // cpl                       # global (SCM) line address
+    scm_row = col // COLUMNS_PER_ROW
+    slot = line % num_lines                 # direct-mapped DRAM cache slot
+    tag = line // num_lines
+    coff = col % cpl                        # column offset within line
+    line_in_row = slot % lpr
+    dram_row = slot // lpr
+    row_group = dram_row // cfg.ctc_sectors_per_line
+    sector = dram_row % cfg.ctc_sectors_per_line
+    page = (col * COLUMN_BYTES) // cfg.act_page_bytes
+
+    # Run segmentation on the SCM row stream.
+    new_run = np.ones(trace.n, dtype=bool)
+    new_run[1:] = scm_row[1:] != scm_row[:-1]
+    run_id = np.cumsum(new_run) - 1
+    n_runs = int(run_id[-1]) + 1 if trace.n else 0
+    run_ncols = np.bincount(run_id, minlength=n_runs)
+    run_haswrite = np.zeros(n_runs, dtype=bool)
+    np.maximum.at(run_haswrite.view(np.int8), run_id, is_write.view(np.int8))
+
+    # AMIL: data mapping to the last column of a DRAM row always bypasses.
+    amil_excluded = (line_in_row == lpr - 1) & (coff == cpl - 1)
+
+    n_pages = int(page.max(initial=0)) + 1 if trace.n else 1
+
+    return {
+        "col": col,
+        "is_write": is_write,
+        "line": line,
+        "slot": slot.astype(np.int32),
+        "tag": tag.astype(np.int32),
+        "line_in_row": line_in_row.astype(np.int32),
+        "dram_row": dram_row.astype(np.int32),
+        "row_group": row_group.astype(np.int32),
+        "sector": sector.astype(np.int32),
+        "page": page.astype(np.int32),
+        "run_start": new_run,
+        "run_ncols": run_ncols[run_id].astype(np.float32),
+        "run_haswrite": run_haswrite[run_id],
+        "amil_excluded": amil_excluded,
+        "n_pages": n_pages,
+    }

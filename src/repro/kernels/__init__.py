@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+Each kernel package: <name>.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit'd public wrapper), ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,78 @@
+"""AMIL tag-probe kernel (TPU Pallas) — the paper's mechanism, vectorized.
+
+Batched residency resolution against an AMIL-packed metadata table: the
+metadata of all 8 cachelines of a DRAM row (superblock) is one packed word,
+so a single table fetch resolves every line in the row (§III-B of the
+paper).  The memtier runtime calls this to resolve block -> HBM-slot
+residency for thousands of requests per step without host round-trips.
+
+Layout: the table is ``int32[rows * 8]`` (one lane per line, flat so that a
+request's ``slot`` (= global line index % num_slots) IS the table index —
+the AMIL property that tags of a row are adjacent makes neighbouring
+requests hit the same VMEM tile).  Each int32 lane packs
+tag[0:2] | valid[2] | dirty[3] | affinity[4:6] exactly like
+``core/amil.py``.  The whole table rides in VMEM (a 64 MiB HBM cache at
+256 KiB blocks needs 256 slots = 1 KiB; even a 16 GiB pool at 2 MiB blocks
+is 8 K lanes = 32 KiB), matching the paper's CTC sizing argument.
+
+Grid: (n_requests // block,).  Per step: gather ``block`` metadata lanes,
+unpack bits, compare tags, emit hit/dirty/affinity lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TAG_MASK = 0b11
+VALID_SHIFT = 2
+DIRTY_SHIFT = 3
+AFF_SHIFT = 4
+AFF_MASK = 0b11
+
+
+def _probe_kernel(meta_ref, slot_ref, tag_ref, hit_ref, dirty_ref, aff_ref):
+    slots = slot_ref[...]                       # (blk,) int32
+    want = tag_ref[...] & TAG_MASK              # (blk,)
+    meta = jnp.take(meta_ref[...], slots, axis=0)
+    tag = meta & TAG_MASK
+    valid = (meta >> VALID_SHIFT) & 1
+    dirty = (meta >> DIRTY_SHIFT) & 1
+    aff = (meta >> AFF_SHIFT) & AFF_MASK
+    hit = (valid == 1) & (tag == want)
+    hit_ref[...] = hit.astype(jnp.int32)
+    dirty_ref[...] = (dirty & hit).astype(jnp.int32)
+    aff_ref[...] = aff.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def amil_probe(meta, slots, tags, *, block: int = 256,
+               interpret: bool = True):
+    """meta: int32[num_slots] packed AMIL lanes; slots/tags: int32[N].
+
+    Returns (hit, dirty, affinity): int32[N] each.
+    """
+    (n_slots,) = meta.shape
+    (N,) = slots.shape
+    assert N % block == 0, (N, block)
+    grid = (N // block,)
+
+    out_shapes = tuple(jax.ShapeDtypeStruct((N,), jnp.int32)
+                       for _ in range(3))
+    return pl.pallas_call(
+        _probe_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_slots,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=tuple(pl.BlockSpec((block,), lambda i: (i,))
+                        for _ in range(3)),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(meta, slots, tags)

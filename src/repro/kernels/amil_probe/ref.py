@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the AMIL probe kernel (delegates to core/amil)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.amil import AFF_MASK, AFF_SHIFT, DIRTY_SHIFT, TAG_MASK, \
+    VALID_SHIFT
+
+
+def amil_probe_reference(meta, slots, tags):
+    m = meta[slots]
+    tag = m & TAG_MASK
+    valid = (m >> VALID_SHIFT) & 1
+    dirty = (m >> DIRTY_SHIFT) & 1
+    aff = (m >> AFF_SHIFT) & AFF_MASK
+    hit = ((valid == 1) & (tag == (tags & TAG_MASK))).astype(jnp.int32)
+    return hit, (dirty & hit).astype(jnp.int32), aff.astype(jnp.int32)

@@ -1,0 +1,134 @@
+"""Flash attention forward kernel (TPU Pallas).
+
+TPU-native tiling: the grid is (batch*heads, q_blocks, kv_blocks) with the
+kv dimension iterated sequentially (TPU grids execute the minor dimension
+in order), so the online-softmax running state (m, l, acc) lives in VMEM
+scratch and persists across kv steps of one q block.  Block shapes keep the
+MXU fed ((block_q x head_dim) @ (head_dim x block_k), both 128-aligned) and
+the working set in VMEM:
+
+    q tile     block_q x d      (bf16)
+    k/v tiles  block_k x d      (bf16)
+    scores     block_q x block_k (f32)   — never leaves VMEM
+    m/l/acc    block_q (x d)     (f32 scratch)
+
+Causal cells fully above the diagonal are skipped via pl.when — this is the
+structural win over the XLA `_blocked_sdpa` path, which must visit every
+block (~2x fewer MACs at S == T).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, softcap: float,
+                  block_q: int, block_k: int, q_real: int,
+                  kv_real: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # real (unpadded) positions: queries end the kv timeline
+    offset = kv_real - q_real
+
+    def compute():
+        q = q_ref[0]                                     # (bq, d)
+        k = k_ref[0]                                     # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0) + offset
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = kpos < kv_real
+        if causal:
+            mask = mask & (kpos <= qpos)
+        s = jnp.where(mask, s, -1e30)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    if causal:
+        # skip blocks entirely above the diagonal
+        first_k_needed = 0
+        block_live = (ki * block_k) <= (qi * block_q + block_q - 1 + offset)
+        pl.when(block_live)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "softcap", "block_q", "block_k", "kv_real",
+                     "q_real", "interpret"))
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         softcap: float = 0.0,
+                         block_q: int = 128, block_k: int = 128,
+                         kv_real: int | None = None,
+                         q_real: int | None = None,
+                         interpret: bool = True):
+    """q: (BH, S, d); k/v: (BH, T, d) — head-flattened, GQA pre-expanded.
+
+    ``kv_real``/``q_real``: true lengths when S/T were padded to block
+    multiples (the causal diagonal is defined by the real lengths).
+    """
+    BH, S, d = q.shape
+    T = k.shape[1]
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    kv_real = T if kv_real is None else kv_real
+    q_real = S if q_real is None else q_real
+    scale = float(1.0 / np.sqrt(d))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, softcap=softcap,
+        block_q=block_q, block_k=block_k, q_real=q_real,
+        kv_real=kv_real)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, S // block_q, T // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

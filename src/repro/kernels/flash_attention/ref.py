@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_reference(q, k, v, *, causal: bool = True,
+                              softcap: float = 0.0,
+                              kv_real: int | None = None):
+    """q: (BH, S, d); k/v: (BH, T, d).  fp32 softmax, full materialization."""
+    BH, S, d = q.shape
+    T = k.shape[1]
+    kv_real = T if kv_real is None else kv_real
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * float(1.0 / np.sqrt(d))
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(T)[None, None, :]
+    mask = kpos < kv_real
+    if causal:
+        qpos = jnp.arange(S)[None, :, None] + (T - S)
+        mask = mask & (kpos <= qpos)
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", w, v.astype(jnp.float32)).astype(
+        q.dtype)

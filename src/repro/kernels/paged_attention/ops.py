@@ -1,0 +1,23 @@
+"""Public jit'd wrapper: paged decode attention."""
+
+from __future__ import annotations
+
+import jax
+
+from .paged_attention import paged_attention as _kernel
+
+
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
+                           softcap=0.0):
+    """q: (B, 1, H, hd) one token; returns (B, 1, H, hd)."""
+    B, one, H, hd = q.shape
+    KV = k_pages.shape[2]
+    G = H // KV
+    qg = q[:, 0].reshape(B, KV, G, hd)
+    out = _kernel(qg, k_pages, v_pages, block_table, lengths,
+                  softcap=softcap, interpret=_interp())
+    return out.reshape(B, 1, H, hd)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the paged decode attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+import numpy as np
+
+
+def paged_attention_reference(q, k_pages, v_pages, block_table, lengths, *,
+                              softcap: float = 0.0):
+    """Gather pages into dense (B, T, KV, hd), then masked attention.
+
+    Shapes as in ``paged_attention``.
+    """
+    B, KV, G, hd = q.shape
+    pool, page_size, _, _ = k_pages.shape
+    n_pages = block_table.shape[1]
+    T = n_pages * page_size
+
+    k = k_pages[block_table]                 # (B, n_pages, page, KV, hd)
+    v = v_pages[block_table]
+    k = k.reshape(B, T, KV, hd)
+    v = v.reshape(B, T, KV, hd)
+
+    logits = jnp.einsum("bkgh,btkh->bkgt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * float(1.0 / np.sqrt(hd))
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    mask = jnp.arange(T)[None, :] < lengths[:, None]     # (B, T)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

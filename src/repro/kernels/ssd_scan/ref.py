@@ -1,0 +1,116 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space dual) chunked scan.
+
+Shapes follow the SSD paper (arXiv:2405.21060):
+    x  : (b, l, h, p)    inputs per head (p = head dim)
+    dt : (b, l, h)       post-softplus step sizes
+    A  : (h,)            negative scalars per head
+    B  : (b, l, g, n)    input projections  (g groups, n = state dim)
+    C  : (b, l, g, n)    output projections
+Sequence is processed in chunks of ``chunk``: quadratic attention-like
+matmuls inside a chunk, a linear recurrence carrying (b, h, p, n) states
+across chunks.  This file is the correctness oracle for the Pallas kernel
+in ``ssd_scan.py`` and the XLA execution path used by the models.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(x):
+    """x: (..., T) -> (..., T, T) with out[i, j] = sum_{l=j+1..i} x_l (i>=j),
+    -inf above the diagonal (so exp() gives the causal decay matrix)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _to_heads(bc, h):
+    """(b, l, g, n) -> (b, l, h, n) by repeating groups."""
+    g = bc.shape[2]
+    return jnp.repeat(bc, h // g, axis=2)
+
+
+def ssd_reference(x, dt, A, B, C, chunk: int,
+                  initial_state: Optional[jnp.ndarray] = None,
+                  unroll: bool = False
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y: (b, l, h, p), final_state: (b, h, p, n))."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc, cs = l // chunk, chunk
+
+    f32 = jnp.float32
+    Bh = _to_heads(B, h).astype(f32)
+    Ch = _to_heads(C, h).astype(f32)
+    dt = dt.astype(f32)
+    xdt = x.astype(f32) * dt[..., None]
+
+    def chunked(t, width):  # (b, l, ...) -> (b, nc, cs, ...)
+        return t.reshape((b, nc, cs) + t.shape[2:])
+
+    xc = chunked(xdt, p)                      # (b, nc, cs, h, p)
+    dtA = chunked(dt * A.astype(f32), 1)      # (b, nc, cs, h)
+    Bc = chunked(Bh, n)                       # (b, nc, cs, h, n)
+    Cc = chunked(Ch, n)
+
+    # Intra-chunk (diagonal block) output.
+    L = jnp.exp(segsum(jnp.moveaxis(dtA, -1, -2)))       # (b, nc, h, cs, cs)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores * L, xc)
+
+    # Per-chunk terminal states.
+    cum = jnp.cumsum(dtA, axis=2)                        # (b, nc, cs, h)
+    total = cum[:, :, -1:, :]                            # (b, nc, 1, h)
+    decay_to_end = jnp.exp(total - cum)                  # (b, nc, cs, h)
+    states = jnp.einsum("bckhn,bckh,bckhp->bchpn", Bc, decay_to_end, xc)
+
+    # Inter-chunk recurrence.
+    chunk_decay = jnp.exp(total[:, :, 0, :])             # (b, nc, h)
+    s0 = (jnp.zeros((b, h, p, n), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(s, inp):
+        dec, st = inp                                     # (b, h), (b,h,p,n)
+        s_out = s                                         # state entering chunk
+        s = s * dec[:, :, None, None] + st
+        return s, s_out
+
+    (s_final, entering) = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+        unroll=True if unroll else 1,
+    )
+    entering = jnp.moveaxis(entering, 0, 1)               # (b, nc, h, p, n)
+
+    # Inter-chunk (off-diagonal) contribution.
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", Cc, entering, jnp.exp(cum))
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y.astype(x.dtype), s_final
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single-token recurrence.
+
+    state: (b, h, p, n); x_t: (b, h, p); dt_t: (b, h); B_t/C_t: (b, g, n).
+    Returns (y_t: (b, h, p), new_state).
+    """
+    b, h, p, n = state.shape
+    f32 = jnp.float32
+    Bh = _to_heads(B_t[:, None], h)[:, 0].astype(f32)     # (b, h, n)
+    Ch = _to_heads(C_t[:, None], h)[:, 0].astype(f32)
+    dt_t = dt_t.astype(f32)
+    dA = jnp.exp(dt_t * A.astype(f32))                    # (b, h)
+    upd = (dt_t[..., None] * x_t.astype(f32))[..., None] * Bh[:, :, None, :]
+    state = state.astype(f32) * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return y.astype(x_t.dtype), state

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never module-level state) so that
+importing this module does not touch JAX device initialization — the dry-run
+driver must be able to set ``--xla_force_host_platform_device_count`` before
+anything initializes the backend.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _mk(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_mesh_for(n_devices: Optional[int] = None, model_parallel: int = 1):
+    """Best-effort (data, model) mesh over the visible devices (tests,
+    elastic restarts on arbitrary device counts)."""
+    n = n_devices or len(jax.devices())
+    assert n % model_parallel == 0
+    return _mk((n // model_parallel, model_parallel), ("data", "model"))

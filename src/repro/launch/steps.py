@@ -1,0 +1,219 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch x shape) cell.
+
+``train_step`` / ``prefill_step`` / ``serve_step`` are the three programs the
+dry-run lowers; the same builders power the real train/serve drivers and the
+smoke tests (with ``mesh=None``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ShapeSpec
+from ..models import (decode_step, init_cache, init_params, prefill,
+                      train_logits)
+from ..models.config import ModelConfig
+from ..optim import adamw
+from ..parallel.mesh_ctx import MeshCtx
+from ..parallel import sharding as shard_rules
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — weak-type-correct, no allocation).
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, with_labels: bool
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "vlm":
+        s_text = S - cfg.n_patches
+        assert s_text > 0, "seq_len must exceed n_patches"
+        out["tokens"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        out["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.vision_d_model), f32)
+        if with_labels:
+            out["labels"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        return out
+    out["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    if cfg.family == "encdec":
+        out["enc_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_seq, cfg.frontend_dim or cfg.d_model), f32)
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    return out
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(partial(init_params, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def opt_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(adamw.init, param_specs(cfg))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec) -> Any:
+    return jax.eval_shape(
+        partial(init_cache, cfg, shape.global_batch, shape.seq_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Everything the step function takes, as ShapeDtypeStructs."""
+    if shape.kind == "train":
+        return {
+            "params": param_specs(cfg),
+            "opt_state": opt_specs(cfg),
+            "batch": batch_specs(cfg, shape, with_labels=True),
+        }
+    if shape.kind == "prefill":
+        return {
+            "params": param_specs(cfg),
+            "batch": batch_specs(cfg, shape, with_labels=False),
+        }
+    if shape.kind == "decode":
+        return {
+            "params": param_specs(cfg),
+            "tokens": jax.ShapeDtypeStruct((shape.global_batch, 1),
+                                           jnp.int32),
+            "cache": cache_specs(cfg, shape),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Loss.
+# ---------------------------------------------------------------------------
+
+AUX_COEF = 0.01
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx: MeshCtx):
+    logits, aux = train_logits(params, batch, cfg, ctx)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        logits = logits[:, cfg.n_patches:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    loss = -jnp.mean(ll)
+    return loss + AUX_COEF * aux, (loss, aux)
+
+
+# ---------------------------------------------------------------------------
+# Step functions.
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, ctx: MeshCtx,
+                    opt_cfg: Optional[adamw.AdamWConfig] = None,
+                    microbatches: int = 1, grad_barrier: bool = False,
+                    grad_shardings=None):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def grads_of(params, batch):
+        (tot, (loss, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg, ctx)
+        return grads, loss, aux
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def mb(carry, b):
+                g_acc, l_acc, a_acc = carry
+                g, l, a = grads_of(params, b)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l,
+                        a_acc + a), None
+            split = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                mb, (zeros, jnp.zeros(()), jnp.zeros(())), split)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss, aux = loss / microbatches, aux / microbatches
+        else:
+            grads, loss, aux = grads_of(params, batch)
+        if grad_shardings is not None:
+            # pin each gradient to its param's (FSDP x TP) sharding right
+            # at the autodiff boundary: the DP reduction then lowers to a
+            # reduce-scatter into the shard instead of a full all-reduce
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        if grad_barrier:
+            # pin the DP gradient reduction in the grads' own (bf16) dtype:
+            # without this XLA sinks the psum past the optimizer's f32
+            # cast, doubling gradient wire bytes
+            grads = jax.lax.optimization_barrier(grads)
+        params, opt_state, om = adamw.update(grads, opt_state, params,
+                                             opt_cfg)
+        metrics = {"loss": loss, "aux": aux, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: MeshCtx, max_len=None):
+    def prefill_step(params, batch):
+        logits, cache = prefill(params, batch, cfg, ctx, max_len=max_len)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return tok, cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, ctx: MeshCtx):
+    def serve_step(params, tokens, cache, pos):
+        logits, cache = decode_step(params, tokens, cache, pos, cfg, ctx)
+        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32), cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly for a (cfg, shape, mesh) cell.
+# ---------------------------------------------------------------------------
+
+def shardings_for(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                  pcfg: Optional[shard_rules.ParallelConfig] = None):
+    """Returns (in_shardings, out_shardings) pytrees for the cell's step."""
+    pcfg = pcfg or shard_rules.make_parallel_cfg(mesh)
+    named = lambda tree: shard_rules.to_named(tree, mesh)
+    specs = input_specs(cfg, shape)
+    p_sh = named(shard_rules.param_pspecs(specs["params"], pcfg))
+    dp_or_none = (pcfg.dp_axes
+                  if shape.global_batch % max(1, pcfg.dp_size) == 0 else None)
+
+    if shape.kind == "train":
+        o_sh = named(shard_rules.param_pspecs(specs["opt_state"], pcfg))
+        b_sh = named(shard_rules.batch_pspecs(specs["batch"], pcfg))
+        metrics_sh = NamedSharding(mesh, P())
+        in_sh = (p_sh, o_sh, b_sh)
+        out_sh = (p_sh, o_sh,
+                  jax.tree.map(lambda _: metrics_sh,
+                               {"loss": 0, "aux": 0, "grad_norm": 0,
+                                "lr": 0}))
+        return in_sh, out_sh
+    if shape.kind == "prefill":
+        b_sh = named(shard_rules.batch_pspecs(specs["batch"], pcfg))
+        kv_sh = named(shard_rules.kv_cache_pspecs(
+            jax.eval_shape(
+                lambda p, b: make_prefill_step(cfg, MeshCtx())(p, b)[1],
+                specs["params"], specs["batch"]),
+            cfg, pcfg, mesh.shape[pcfg.tp_axis]))
+        tok_sh = NamedSharding(mesh, P(dp_or_none, None))
+        return (p_sh, b_sh), (tok_sh, kv_sh)
+    if shape.kind == "decode":
+        c_sh = named(shard_rules.kv_cache_pspecs(
+            specs["cache"], cfg, pcfg, mesh.shape[pcfg.tp_axis]))
+        tok_sh = NamedSharding(mesh, P(dp_or_none, None))
+        pos_sh = NamedSharding(mesh, P())
+        return (p_sh, tok_sh, c_sh, pos_sh), (tok_sh, c_sh)
+    raise ValueError(shape.kind)

@@ -1,0 +1,44 @@
+"""Training launcher: ``python -m repro.launch.train --arch qwen2.5-3b
+--smoke --steps 50``.  On real pods the same entry point runs under the
+jax.distributed initializer; on this container it trains smoke configs."""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    from ..configs import ShapeSpec, get_config
+    from ..data.synthetic import for_model
+    from ..launch.mesh import make_mesh_for
+    from ..train import TrainConfig, Trainer
+    import jax
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    data = for_model(cfg, args.seq, args.batch)
+    mesh = (make_mesh_for(model_parallel=args.model_parallel)
+            if len(jax.devices()) > 1 else None)
+    tr = Trainer(cfg, shape, data,
+                 TrainConfig(total_steps=args.steps,
+                             ckpt_dir=args.ckpt_dir,
+                             microbatches=args.microbatches),
+                 mesh=mesh)
+    out = tr.run()
+    print(f"final loss {out['final_loss']:.4f} after {out['steps']} steps "
+          f"(stragglers={out['stragglers']}, recoveries={out['recoveries']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Track B: two-tier (HBM over host) memory runtime with the paper's
+AMIL / bypass / CTC machinery applied to weights and KV pages."""
+
+from .block_table import TierConfig, access, init_state, probe_blocks
+from .paged_kv import PagedKVConfig, PagedKVManager
+from .weight_stream import Placement, WeightStreamer, plan_placement
+
+__all__ = [
+    "TierConfig", "access", "init_state", "probe_blocks",
+    "PagedKVConfig", "PagedKVManager",
+    "Placement", "WeightStreamer", "plan_placement",
+]

@@ -1,0 +1,185 @@
+"""Functional two-tier block table — the paper's DRAM-cache state, Track B.
+
+HBM ("DRAM cache") is a direct-mapped pool of ``num_slots`` block slots over
+a larger capacity tier ("SCM" = host memory).  Metadata is AMIL-packed: one
+int32 lane per slot, tags of the 8 slots of a superblock adjacent, so the
+``amil_probe`` kernel resolves residency for a whole superblock per fetch
+and the CTC-analogue (a user-configurable *hot* slice of the table kept in
+scalar memory on real TPUs) covers rows, not lines.
+
+All state lives in JAX arrays and every transition is a pure function —
+jit-able, shard-able, checkpoint-able like any other training state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import bypass as bp
+from ..core.timing import DeviceTiming
+
+
+@dataclasses.dataclass(frozen=True)
+class TierConfig:
+    """Two-tier geometry + the timing constants driving the scores.
+
+    fast == HBM, slow == host/capacity tier.  The penalty score uses the
+    paper's Eq. 1 with 'activation' = per-transfer setup latency and
+    'write recovery' = writeback cost, expressed in microseconds.
+    """
+    block_bytes: int = 256 * 1024
+    blocks_per_super: int = 8
+    num_slots: int = 256                      # fast-tier capacity in blocks
+    num_blocks: int = 2048                    # slow-tier capacity in blocks
+    n_levels: int = 4
+    ema_weight: float = 0.01
+    use_activation_counter: bool = True
+    # Eq.1 constants (us): slow-tier fetch setup vs fast, write penalty.
+    fast_setup_us: float = 1.0
+    slow_setup_us: float = 20.0
+    fast_write_us: float = 1.0
+    slow_write_us: float = 60.0
+
+    @property
+    def timing_fast(self) -> DeviceTiming:
+        return DeviceTiming(rcd=int(self.fast_setup_us),
+                            wr=int(self.fast_write_us))
+
+    @property
+    def timing_slow(self) -> DeviceTiming:
+        return DeviceTiming(rcd=int(self.slow_setup_us),
+                            wr=int(self.slow_write_us))
+
+    @property
+    def num_supers(self) -> int:
+        return self.num_blocks // self.blocks_per_super
+
+
+def init_state(cfg: TierConfig) -> Dict[str, jnp.ndarray]:
+    return {
+        # AMIL lanes: tag | valid | dirty | affinity per slot
+        "meta": jnp.zeros((cfg.num_slots,), jnp.int32),
+        # per-superblock activation (hotness) counters
+        "act": jnp.zeros((cfg.num_supers,), jnp.int32),
+        "pen_ema": jnp.zeros((), jnp.float32),
+        "pen_max": jnp.full((), 1e-6, jnp.float32),
+        "aff_max": jnp.full((), 1e-6, jnp.float32),
+        "rng": jnp.asarray(0x2545F491, jnp.uint32),
+        # counters
+        "fast_hits": jnp.zeros((), jnp.int32),
+        "slow_reads": jnp.zeros((), jnp.int32),
+        "fills": jnp.zeros((), jnp.int32),
+        "bypasses": jnp.zeros((), jnp.int32),
+        "writebacks": jnp.zeros((), jnp.int32),
+    }
+
+
+def _pack(tag, valid, dirty, aff):
+    return (tag & 3) | (valid << 2) | (dirty << 3) | ((aff & 3) << 4)
+
+
+def _unpack(meta):
+    return meta & 3, (meta >> 2) & 1, (meta >> 3) & 1, (meta >> 4) & 3
+
+
+def probe_blocks(state, blocks, cfg: TierConfig):
+    """Residency of ``blocks`` (int32[N] global block ids).
+
+    Returns (hit int32[N], slot int32[N], dirty int32[N], aff int32[N]).
+    """
+    slots = blocks % cfg.num_slots
+    tags = blocks // cfg.num_slots
+    meta = state["meta"][slots]
+    tag, valid, dirty, aff = _unpack(meta)
+    hit = ((valid == 1) & (tag == (tags & 3))).astype(jnp.int32)
+    return hit, slots, dirty * hit, aff
+
+
+def access(state, blocks, is_write, run_blocks, cfg: TierConfig):
+    """One batched access round: probe + bypass policy + fills.
+
+    blocks:     int32[N] requested block ids (N static per call site)
+    is_write:   bool[N]
+    run_blocks: float32[N] contiguous blocks touched in the same superblock
+                (spatial locality — the Eq. 1 denominator)
+
+    Returns (state, decision dict) where decision["fill"] marks blocks the
+    caller must copy into their slot (the actual data movement is the
+    caller's: weight streamer / paged-KV pool do the DMA).
+    """
+    fast, slow = cfg.timing_fast, cfg.timing_slow
+    hit, slots, v_dirty, v_aff = probe_blocks(state, blocks, cfg)
+    tags = blocks // cfg.num_slots
+    supers = blocks // cfg.blocks_per_super
+
+    # hotness
+    act = state["act"].at[supers].add(1)
+    page_act = act[supers]
+    max_act = jnp.maximum(jnp.max(page_act).astype(jnp.float32), 1.0)
+
+    # Eq. 1 scores
+    pen = bp.scm_penalty_score(run_blocks, is_write, fast, slow)
+    pen_max = jnp.maximum(state["pen_max"], jnp.max(pen))
+    pen_ema = state["pen_ema"]
+    # batched EMA: fold the round's mean in with the configured weight
+    pen_ema = bp.ema_update(pen_ema, jnp.mean(pen), cfg.ema_weight)
+    req_lvl = bp.discretize(pen, pen_max, cfg.n_levels)
+    avg_lvl = bp.discretize(pen_ema, pen_max, cfg.n_levels)
+
+    aff = bp.affinity_score(pen, page_act, cfg.use_activation_counter)
+    aff_max = jnp.maximum(state["aff_max"], jnp.max(aff))
+    req_aff = bp.discretize(aff, aff_max, cfg.n_levels)
+
+    miss = hit == 0
+    pass1 = req_lvl > avg_lvl
+    valid_victim = (_unpack(state["meta"][slots])[1]) == 1
+    accept = (~valid_victim) | (req_aff > v_aff)
+    fill = miss & pass1 & accept
+    bypass = miss & ~fill
+
+    # victim affinity decay with p_dec
+    rng = bp.xorshift32(state["rng"])
+    dice = bp.uniform01(rng + blocks.astype(jnp.uint32))
+    dec = (miss & pass1 & ~accept & valid_victim
+           & (dice < bp.p_dec(page_act, max_act)))
+
+    wb = fill & (v_dirty == 1)
+
+    # metadata update: fills take the slot; decayed victims lose a level
+    new_aff = jnp.where(fill, req_aff,
+                        jnp.maximum(v_aff - dec.astype(jnp.int32), 0))
+    new_meta = jnp.where(
+        fill,
+        _pack(tags, jnp.ones_like(tags), is_write.astype(jnp.int32),
+              req_aff),
+        _pack(_unpack(state["meta"][slots])[0],
+              _unpack(state["meta"][slots])[1],
+              (_unpack(state["meta"][slots])[2]
+               | (hit & is_write.astype(jnp.int32))),
+              new_aff),
+    )
+    meta = state["meta"].at[slots].set(new_meta)
+
+    new_state = {
+        **state,
+        "meta": meta,
+        "act": act,
+        "pen_ema": pen_ema,
+        "pen_max": pen_max,
+        "aff_max": aff_max,
+        "rng": rng,
+        "fast_hits": state["fast_hits"] + jnp.sum(hit),
+        "slow_reads": state["slow_reads"] + jnp.sum(miss),
+        "fills": state["fills"] + jnp.sum(fill),
+        "bypasses": state["bypasses"] + jnp.sum(bypass),
+        "writebacks": state["writebacks"] + jnp.sum(wb),
+    }
+    decision = {"hit": hit.astype(bool), "slot": slots, "fill": fill,
+                "bypass": bypass, "writeback": wb,
+                "victim_block": (_unpack(state["meta"][slots])[0]
+                                 * cfg.num_slots + slots)}
+    return new_state, decision

@@ -1,0 +1,130 @@
+"""Host-offload weight streaming for oversubscribed training.
+
+When a model (or its optimizer state) exceeds the fast-tier budget, leaves
+are blocked and placed by DRAM-affinity score:
+
+  * optimizer moments + master weights: read-modify-WRITTEN every step ->
+    maximal write intensity -> pinned in the fast tier first (the paper's
+    write filtering: slow-tier writes are the expensive operation);
+  * bf16 weights: read-only, streamed sequentially with perfect spatial
+    locality -> lowest penalty-per-access -> bypass candidates (kept on the
+    host, staged in per step);
+  * hot small leaves (norms, biases, embeddings in the lookup path): high
+    activation counters promote them despite their read-only nature.
+
+On this CPU container the two tiers are real: host numpy buffers (slow) vs
+JAX device arrays (fast); `stage_in`/`flush_out` do the actual transfers so
+examples/train_tiered.py exercises true two-tier training end-to-end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from ..core import bypass as bp
+from .block_table import TierConfig
+
+
+@dataclasses.dataclass
+class Placement:
+    pinned: List[str]
+    streamed: List[str]
+    fast_bytes: int
+    slow_bytes: int
+
+
+def _leaf_entries(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def plan_placement(params, opt_state, fast_budget_bytes: int,
+                   tier: TierConfig = TierConfig()) -> Placement:
+    """Score every leaf with the DRAM-affinity machinery and pin greedily."""
+    fast, slow = tier.timing_fast, tier.timing_slow
+    entries = []
+    for prefix, tree, writes_per_step, reads_per_step in (
+            ("opt", opt_state, 1.0, 1.0),
+            ("params", params, 0.0, 3.0)):   # fwd + remat-fwd + bwd reads
+        for name, leaf in _leaf_entries(tree):
+            nbytes = leaf.size * leaf.dtype.itemsize
+            run = max(1.0, nbytes / tier.block_bytes)   # sequential blocks
+            pen = float(bp.scm_penalty_score(
+                run, writes_per_step > 0, fast, slow))
+            hot = reads_per_step + 3.0 * writes_per_step
+            score = pen * hot
+            entries.append((f"{prefix}{name}", nbytes, score))
+
+    entries.sort(key=lambda e: -e[2])
+    pinned, streamed = [], []
+    used = 0
+    for name, nbytes, score in entries:
+        if used + nbytes <= fast_budget_bytes:
+            pinned.append(name)
+            used += nbytes
+        else:
+            streamed.append(name)
+    slow_bytes = sum(n for name, n, _ in entries if name in set(streamed))
+    return Placement(pinned=pinned, streamed=streamed, fast_bytes=used,
+                     slow_bytes=slow_bytes)
+
+
+class WeightStreamer:
+    """Executes a Placement: pinned leaves live on device, streamed leaves
+    live as host numpy and are staged in before each step."""
+
+    def __init__(self, params, opt_state, fast_budget_bytes: int,
+                 tier: TierConfig = TierConfig()):
+        self.placement = plan_placement(params, opt_state,
+                                        fast_budget_bytes, tier)
+        pinned = set(self.placement.pinned)
+        self._host: Dict[str, np.ndarray] = {}
+        self._device: Dict[str, Any] = {}
+        self._trees = {}
+        self.bytes_streamed_in = 0
+        self.bytes_streamed_out = 0
+
+        for prefix, tree in (("opt", opt_state), ("params", params)):
+            flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+            self._trees[prefix] = treedef
+            for path, leaf in flat:
+                name = f"{prefix}{jax.tree_util.keystr(path)}"
+                if name in pinned:
+                    self._device[name] = jax.device_put(leaf)
+                else:
+                    self._host[name] = np.asarray(jax.device_get(leaf))
+
+    def stage_in(self, params_like, opt_like) -> Tuple[Any, Any]:
+        """Materialize full (params, opt_state) on device for one step."""
+        out = []
+        for prefix, like in (("params", params_like), ("opt", opt_like)):
+            flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+            leaves = []
+            for path, leaf in flat:
+                name = f"{prefix}{jax.tree_util.keystr(path)}"
+                if name in self._device:
+                    leaves.append(self._device[name])
+                else:
+                    arr = self._host[name]
+                    self.bytes_streamed_in += arr.nbytes
+                    leaves.append(jax.device_put(arr))
+            out.append(jax.tree_util.tree_unflatten(treedef, leaves))
+        return out[0], out[1]          # (params, opt_state)
+
+    def flush_out(self, params, opt_state) -> None:
+        """Write step results back to their tiers (streamed -> host)."""
+        for prefix, tree in (("params", params), ("opt", opt_state)):
+            flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+            for path, leaf in flat:
+                name = f"{prefix}{jax.tree_util.keystr(path)}"
+                if name in self._device:
+                    self._device[name] = leaf
+                else:
+                    arr = np.asarray(jax.device_get(leaf))
+                    self.bytes_streamed_out += arr.nbytes
+                    self._host[name] = arr

@@ -1,0 +1,15 @@
+"""Composable model definitions for all assigned architecture families."""
+
+from .config import ModelConfig
+from .transformer import (
+    decode_step,
+    init_cache,
+    init_params,
+    prefill,
+    train_logits,
+)
+
+__all__ = [
+    "ModelConfig", "decode_step", "init_cache", "init_params", "prefill",
+    "train_logits",
+]

@@ -1,0 +1,353 @@
+"""Shared model building blocks (pure-functional, scan-friendly).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init_* builds them, *_apply runs
+    them.  Layer stacks are built by stacking each leaf with a leading
+    ``n_layers`` axis and scanning (`jax.lax.scan`) — HLO size and compile
+    time are then depth-independent, which the 80-compile dry-run needs.
+  * computation dtype = cfg.jdtype (bf16), with fp32 islands for norms,
+    softmax and rope.
+  * KV caches are dicts {"k": (B, S_max, KV, hd), "v": ..., } carried per
+    layer; decode updates them at ``pos`` via dynamic_update_slice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init helpers.
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else float(1.0 / np.sqrt(fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(x, p, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE.
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional bias / softcap / cross-attention / KV cache).
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, d_model=None, n_heads=None,
+                   n_kv=None) -> Params:
+    d = d_model or cfg.d_model
+    h = n_heads or cfg.n_heads
+    kv = n_kv or cfg.n_kv_heads
+    hd = cfg.hd if d_model is None else d // h
+    ks = jax.random.split(key, 4)
+    dt = cfg.jdtype
+    p = {
+        "wq": _dense_init(ks[0], (d, h * hd), dt),
+        "wk": _dense_init(ks[1], (d, kv * hd), dt),
+        "wv": _dense_init(ks[2], (d, kv * hd), dt),
+        "wo": _dense_init(ks[3], (h * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    return p
+
+
+def _sdpa(q, k, v, mask, softcap: float):
+    """Naive SDPA (materializes (B,KV,G,S,T) logits).  Kept as the decode
+    path (T small per step), the oracle for the flash kernel, and the
+    "naive" baseline of the §Perf attention iteration.
+
+    q: (B,S,H,hd) k/v: (B,T,KV,hd); GQA by head-group reshape."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q = q.reshape(B, S, KV, G, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    logits = logits * float(1.0 / np.sqrt(hd))
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v)
+    return out.reshape(B, S, H * hd)
+
+
+def _blocked_sdpa(q, k, v, *, causal: bool, softcap: float,
+                  q_chunk: int, kv_chunk: int, unroll: bool):
+    """Online-softmax attention, chunked over queries and keys.
+
+    Peak live logits are (B, H, q_chunk, kv_chunk) instead of the naive
+    (B, H, S, T) — the XLA-level analogue of flash attention (the Pallas
+    kernel does the same tiling in VMEM on real TPUs).  k/v arrive already
+    expanded to H heads.  Shapes: q (B,S,H,hd), k/v (B,T,H,hd).
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    nq, nk = S // q_chunk, T // kv_chunk
+    assert S % q_chunk == 0 and T % kv_chunk == 0, (S, T, q_chunk, kv_chunk)
+    scale = float(1.0 / np.sqrt(hd))
+    offset = T - S          # queries sit at the end of the key timeline
+
+    qb = jnp.moveaxis(q.reshape(B, nq, q_chunk, H, hd), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, kv_chunk, H, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, kv_chunk, H, hd), 1, 0)
+
+    def q_body(_, qi_q):
+        qi, qblk = qi_q
+        qpos = qi * q_chunk + jnp.arange(q_chunk) + offset
+
+        def kv_body(carry, kj_kv):
+            m, l, acc = carry
+            kj, kblk, vblk = kj_kv
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap > 0.0:
+                s = softcap * jnp.tanh(s / softcap)
+            if causal:
+                msk = (kpos[None, :] <= qpos[:, None])[None, None]
+                s = jnp.where(msk, s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        init = (
+            jnp.full((B, H, q_chunk), -jnp.inf, jnp.float32),
+            jnp.zeros((B, H, q_chunk), jnp.float32),
+            jnp.zeros((B, H, q_chunk, hd), jnp.float32),
+        )
+        # checkpoint: the body's probability block is recomputed in the
+        # backward pass (flash-attention backward) instead of being stacked
+        # across kv steps by scan AD — O(S*T) saved residuals otherwise.
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_body), init, (jnp.arange(nk), kb, vb),
+            unroll=True if unroll else 1)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, jnp.moveaxis(out, 1, 2)        # (B, q_chunk, H, hd)
+
+    _, blocks = jax.lax.scan(q_body, None, (jnp.arange(nq), qb),
+                             unroll=True if unroll else 1)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, S, H, hd)
+    return out.reshape(B, S, H * hd).astype(q.dtype)
+
+
+def attention(p, x, cfg: ModelConfig, *,
+              ctx=None,
+              positions=None,
+              kv_cache: Optional[Params] = None,
+              pos: Optional[jnp.ndarray] = None,
+              causal: bool = True,
+              x_kv=None,
+              use_rope: bool = True,
+              impl: str = "blocked",
+              hd: Optional[int] = None,
+              q_chunk: int = 512,
+              kv_chunk: int = 1024) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """General attention.
+
+    * training/prefill: ``kv_cache`` None or empty-at-pos-0; returns cache.
+    * decode: ``x`` is (B, 1, D); kv written at ``pos`` into the cache.
+    * cross-attention: pass ``x_kv`` (encoder states) and causal=False.
+    * ``impl``: "blocked" (online-softmax, O(chunk^2) live logits — the
+      default and the XLA analogue of the flash kernel) or "naive"
+      (the §Perf baseline).  Decode always takes the naive grouped path
+      (T-step logits are small).
+    * ``hd``: head dim override for encoder/vision geometries.
+    """
+    B, S, D = x.shape
+    h_src = x if x_kv is None else x_kv
+    q = x @ p["wq"]
+    k = h_src @ p["wk"]
+    v = h_src @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    hd = hd or cfg.hd
+    H = q.shape[-1] // hd
+    KV = k.shape[-1] // hd
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, h_src.shape[1], KV, hd)
+    v = v.reshape(B, h_src.shape[1], KV, hd)
+
+    if positions is None:
+        base = pos if pos is not None else 0
+        positions = base + jnp.arange(S)[None, :]
+        positions = jnp.broadcast_to(positions, (B, S))
+    if use_rope and x_kv is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    def wsc_heads(t):
+        if ctx is None or not getattr(ctx, "active", False) \
+                or getattr(ctx, "pure_dp", False):
+            return t
+        tp = ctx.tp
+        if t.shape[2] % ctx.tp_size == 0:
+            return ctx.wsc(t, ctx.dp, None, tp, None)
+        return t
+
+    def wsc_decode(t):
+        """Match the KV cache's sharding mode: heads when they divide tp,
+        else head_dim.  Mixing modes makes GSPMD all-gather the full cache
+        per layer (observed: 2 GiB f32 gathers per k/v per token)."""
+        if ctx is None or not getattr(ctx, "active", False) \
+                or getattr(ctx, "pure_dp", False):
+            return t
+        if KV % ctx.tp_size == 0 and t.shape[2] % ctx.tp_size == 0:
+            return ctx.wsc(t, ctx.dp, None, ctx.tp, None)
+        if hd % ctx.tp_size == 0:
+            return ctx.wsc(t, ctx.dp, None, None, ctx.tp)
+        return t
+
+    new_cache = None
+    if kv_cache is not None and pos is not None:
+        # decode: write S new entries at pos, attend over the full cache
+        z = jnp.zeros((), jnp.int32)
+        idx = (z, jnp.asarray(pos, jnp.int32), z, z)
+        k, v = wsc_decode(k), wsc_decode(v)
+        kc = jax.lax.dynamic_update_slice(kv_cache["k"], k, idx)
+        vc = jax.lax.dynamic_update_slice(kv_cache["v"], v, idx)
+        new_cache = {"k": kc, "v": vc}
+        k, v = kc, vc
+        T = k.shape[1]
+        kpos = jnp.arange(T)[None, :]
+        mask = (kpos <= positions[:, -1:])[:, None, None, None, :]
+        out = _sdpa(wsc_decode(q), k, v, mask, cfg.logit_softcap)
+        return out @ p["wo"], new_cache
+
+    if kv_cache is not None:
+        # prefill: the cache is exactly the fresh (unexpanded) K/V
+        new_cache = {"k": k, "v": v}
+
+    T = k.shape[1]
+    if ctx is not None and getattr(ctx, "unroll", False):
+        # cost-probe mode unrolls every scan; half-size chunks keep the
+        # unrolled body count at 4 (FLOPs and total logit bytes are
+        # invariant to the block size, so probe costs stay exact).
+        q_chunk = max(S // 2, 1)
+        kv_chunk = max(T // 2, 1)
+    blocked_ok = (impl == "blocked" and S > 1
+                  and S % min(q_chunk, S) == 0 and T % min(kv_chunk, T) == 0)
+    if blocked_ok:
+        G = H // KV
+        ke = jnp.repeat(k, G, axis=2) if G > 1 else k
+        ve = jnp.repeat(v, G, axis=2) if G > 1 else v
+        q, ke, ve = wsc_heads(q), wsc_heads(ke), wsc_heads(ve)
+        out = _blocked_sdpa(
+            q, ke, ve, causal=causal, softcap=cfg.logit_softcap,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+            unroll=bool(ctx is not None and getattr(ctx, "unroll", False)))
+    else:
+        mask = _causal_mask(B, S, T) if causal else None
+        out = _sdpa(wsc_heads(q), k, v, mask, cfg.logit_softcap)
+    return out @ p["wo"], new_cache
+
+
+def _causal_mask(B, S, T):
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(T)[None, :]
+    m = j <= i + (T - S)
+    return m[None, None, None, :, :]
+
+
+# ---------------------------------------------------------------------------
+# MLPs.
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_model=None, d_ff=None) -> Params:
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": _dense_init(ks[0], (d, f), dt),
+            "w_up": _dense_init(ks[1], (d, f), dt),
+            "w_down": _dense_init(ks[2], (f, d), dt),
+        }
+    return {
+        "w_up": _dense_init(ks[0], (d, f), dt),
+        "b_up": jnp.zeros((f,), dt),
+        "w_down": _dense_init(ks[1], (f, d), dt),
+        "b_down": jnp.zeros((d,), dt),
+    }
+
+
+def mlp(p, x, cfg: ModelConfig):
+    if "w_gate" in p:
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    return h @ p["w_down"] + p["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding.
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    p = {"tok": _dense_init(ks[0], (cfg.vocab, cfg.d_model), cfg.jdtype,
+                            scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _dense_init(ks[1], (cfg.d_model, cfg.vocab),
+                                   cfg.jdtype, scale=0.02)
+    return p
+
+
+def embed(p, tokens):
+    return p["tok"][tokens]
+
+
+def unembed(p, x):
+    w = p.get("unembed")
+    if w is None:
+        w = p["tok"].T
+    return (x @ w).astype(jnp.float32)

@@ -1,0 +1,137 @@
+"""Mamba2 (SSD) block: projections -> causal depthwise conv -> SSD -> gated out.
+
+Used standalone for ``mamba2-1.3b`` and as the backbone block of the
+``zamba2`` hybrid.  The SSD core is ``kernels/ssd_scan/ref.py`` (XLA path);
+the Pallas kernel version is exercised by tests/benchmarks.
+
+Unlike reference implementations that fuse one ``in_proj`` producing the
+concatenated ``[z, x, B, C, dt]``, the projections here are split per
+stream.  This is deliberate hardware co-design: the fused projection's
+output dim mixes head-sharded (z, x) and replicated (B, C, dt) segments and
+cannot be tensor-parallel-sharded without resharding; split projections give
+clean Megatron-style TP over SSD heads (d_inner = heads x head_dim shards on
+the ``model`` axis, state/group projections replicate, out_proj reduces).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ssd_scan.ref import ssd_decode_step, ssd_reference
+from .config import ModelConfig
+from .layers import Params, _dense_init, init_rmsnorm, rms_norm
+
+
+def init_mamba_block(key, cfg: ModelConfig) -> Params:
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    dt = cfg.jdtype
+    K = cfg.ssm_conv
+    return {
+        "z_proj": _dense_init(ks[0], (cfg.d_model, di), dt),
+        "x_proj": _dense_init(ks[1], (cfg.d_model, di), dt),
+        "bc_proj": _dense_init(ks[2], (cfg.d_model, 2 * g * n), dt),
+        "dt_proj": _dense_init(ks[3], (cfg.d_model, h), dt),
+        "conv_x_w": _dense_init(ks[4], (K, di), dt, scale=0.5),
+        "conv_x_b": jnp.zeros((di,), dt),
+        "conv_bc_w": _dense_init(ks[5], (K, 2 * g * n), dt, scale=0.5),
+        "conv_bc_b": jnp.zeros((2 * g * n,), dt),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gate_norm": init_rmsnorm(di),
+        "out_proj": _dense_init(ks[6], (di, cfg.d_model), dt),
+    }
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv along sequence: u (B, S, C), w (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(K):
+        out = out + pad[:, i:i + u.shape[1], :] * w[i]
+    return out + b
+
+
+def mamba_block(p, x, cfg: ModelConfig,
+                cache: Optional[Params] = None,
+                pos=None, unroll: bool = False
+                ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x: (B, S, D).  Training/prefill when pos is None; decode otherwise.
+
+    cache = {"state": (B, h, hp, n), "conv_x": (B, K-1, di),
+             "conv_bc": (B, K-1, 2gn)}.
+    """
+    B, S, D = x.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    K = cfg.ssm_conv
+
+    z = x @ p["z_proj"]
+    xr = x @ p["x_proj"]
+    bc = x @ p["bc_proj"]
+    dtp = x @ p["dt_proj"]
+    A = -jnp.exp(p["A_log"])
+
+    if pos is None:
+        xc = jax.nn.silu(_causal_conv(xr, p["conv_x_w"], p["conv_x_b"]))
+        bcc = jax.nn.silu(_causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"]))
+        xs = xc.reshape(B, S, h, hp)
+        Bm = bcc[..., :g * n].reshape(B, S, g, n)
+        Cm = bcc[..., g * n:].reshape(B, S, g, n)
+        dtv = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])
+        pad = (-S) % cfg.ssm_chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        init = None if cache is None else cache.get("state")
+        y, state = ssd_reference(xs, dtv, A, Bm, Cm, cfg.ssm_chunk,
+                                 initial_state=init, unroll=unroll)
+        y = y[:, :S] + xs[:, :S] * p["D"][None, None, :, None]
+        y = y.reshape(B, S, di)
+        new_cache = None
+        if cache is not None:
+            # keep the last K-1 raw conv inputs for decode continuation
+            tail_x = jnp.pad(xr, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):]
+            tail_bc = jnp.pad(bc, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):]
+            new_cache = {"state": state, "conv_x": tail_x,
+                         "conv_bc": tail_bc}
+    else:
+        # decode: one new token against the carried conv window + SSM state
+        win_x = jnp.concatenate([cache["conv_x"], xr[:, :1]], axis=1)
+        win_bc = jnp.concatenate([cache["conv_bc"], bc[:, :1]], axis=1)
+        xc = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", win_x, p["conv_x_w"]) + p["conv_x_b"])
+        bcc = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", win_bc, p["conv_bc_w"])
+            + p["conv_bc_b"])
+        xs = xc.reshape(B, h, hp)
+        Bm = bcc[..., :g * n].reshape(B, g, n)
+        Cm = bcc[..., g * n:].reshape(B, g, n)
+        dtv = jax.nn.softplus(dtp[:, 0].astype(jnp.float32) + p["dt_bias"])
+        y_t, state = ssd_decode_step(cache["state"], xs, dtv, A, Bm, Cm)
+        y_t = y_t + xs * p["D"][None, :, None]
+        y = y_t.reshape(B, 1, di)
+        new_cache = {"state": state, "conv_x": win_x[:, 1:],
+                     "conv_bc": win_bc[:, 1:]}
+
+    y = y.astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return (y @ p["out_proj"]).astype(x.dtype), new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> Params:
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    K = cfg.ssm_conv
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, n),
+                           jnp.float32),
+        "conv_x": jnp.zeros((batch, K - 1, di), cfg.jdtype),
+        "conv_bc": jnp.zeros((batch, K - 1, 2 * g * n), cfg.jdtype),
+    }

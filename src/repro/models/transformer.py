@@ -1,0 +1,435 @@
+"""Model assembly for every assigned architecture family.
+
+All stacks are `lax.scan`-over-layers (stacked leading ``L`` axis) so compile
+time and HLO size are depth-independent.  The hybrid family scans over
+*super-blocks* (``attn_every`` Mamba2 layers + one shared-attention
+application) so the shared block's per-site KV caches stay scannable.
+
+Public API (all pure functions):
+    init_params(rng, cfg)                         -> params
+    train_logits(params, batch, cfg, ctx)         -> (logits, aux)
+    prefill(params, batch, cfg, ctx, max_len)     -> (logits, cache)
+    decode_step(params, tokens, cache, pos, cfg, ctx) -> (logits, cache)
+    init_cache(cfg, batch, max_len)               -> cache  (decode dry-run)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.mesh_ctx import MeshCtx
+from .config import ModelConfig
+from . import layers as L
+from .layers import Params
+from .mamba2 import init_mamba_block, init_mamba_cache, mamba_block
+from .moe import init_moe, moe_ffn
+
+
+
+def _scan(ctx: MeshCtx, body, carry, xs):
+    """Layer scan with the ctx's remat / unroll policy applied."""
+    if ctx.remat:
+        body = jax.checkpoint(body)
+    return jax.lax.scan(body, carry, xs, unroll=True if ctx.unroll else 1)
+
+
+def _sp_constrain(ctx: MeshCtx, x):
+    """Megatron-style sequence parallelism at block boundaries: the residual
+    stream (and therefore every scan-saved layer savepoint) is sharded over
+    the tp axis along S; GSPMD inserts the all-gather at attention/MLP entry
+    and the reduce-scatter at exit."""
+    if (ctx.active and ctx.sequence_parallel and x.ndim == 3
+            and x.shape[1] % ctx.tp_size == 0):
+        if ctx.sp_barrier:
+            # pin the bf16 value so XLA cannot sink the f32->bf16 convert
+            # past the resharding collective (observed: f32 all-gathers of
+            # the residual stream, 2x wire bytes)
+            x = jax.lax.optimization_barrier(x)
+        return ctx.wsc(x, ctx.dp, ctx.tp, None)
+    return x
+
+
+def _sp_gather(ctx: MeshCtx, x):
+    """Explicit S all-gather feeding TP projections.  Norms run in the SP
+    domain (elementwise over D); projections need full S with heads/hidden
+    sharded — without this constraint GSPMD resolves the S-vs-heads sharding
+    conflict by involuntary full replication."""
+    if (ctx.active and ctx.sequence_parallel and x.ndim == 3
+            and x.shape[1] % ctx.tp_size == 0):
+        if ctx.sp_barrier:
+            x = jax.lax.optimization_barrier(x)
+        return ctx.wsc(x, ctx.dp, None, None)
+    return x
+
+# ---------------------------------------------------------------------------
+# Per-layer init.
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm":
+        return {"norm": L.init_rmsnorm(cfg.d_model),
+                "mamba": init_mamba_block(ks[0], cfg)}
+    if cfg.family == "hybrid":
+        return {"norm": L.init_rmsnorm(cfg.d_model),
+                "mamba": init_mamba_block(ks[0], cfg)}
+    p = {
+        "norm1": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(ks[0], cfg),
+        "norm2": L.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    if cfg.family == "encdec":
+        p["norm_x"] = L.init_rmsnorm(cfg.d_model)
+        p["cross"] = L.init_attention(ks[2], cfg)
+    return p
+
+
+def _init_enc_layer(key, cfg: ModelConfig, vision: bool = False) -> Params:
+    if vision:
+        d, h, f = cfg.vision_d_model, cfg.vision_heads, cfg.vision_d_ff
+    else:
+        d, h, f = cfg.d_model, cfg.n_heads, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    import dataclasses as _dc
+    sub = _dc.replace(cfg, d_model=d, n_heads=h, n_kv_heads=h, d_ff=f,
+                      head_dim=d // h, qkv_bias=False)
+    return {
+        "norm1": L.init_rmsnorm(d),
+        "attn": L.init_attention(ks[0], sub),
+        "norm2": L.init_rmsnorm(d),
+        "mlp": L.init_mlp(ks[1], sub),
+    }
+
+
+def _stack_init(key, n: int, fn) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def _unique_buffers(tree):
+    """Force every leaf onto its own buffer.  Identical eager constants
+    (zeros of equal shape across leaves) can share one XLA buffer, which
+    breaks donation ('attempt to donate the same buffer twice')."""
+    return jax.tree.map(lambda x: x + jnp.zeros((), x.dtype), tree)
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    cfg = cfg.validate()
+    ks = jax.random.split(rng, 8)
+    params: Params = {"embed": L.init_embed(ks[0], cfg),
+                      "final_norm": L.init_rmsnorm(cfg.d_model)}
+    if cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        params["blocks"] = _stack_init(
+            ks[1], n_super,
+            lambda k: _stack_init(
+                k, cfg.attn_every, lambda kk: _init_block(kk, cfg)))
+        params["shared"] = {
+            "norm1": L.init_rmsnorm(cfg.d_model),
+            "attn": L.init_attention(ks[2], cfg),
+            "norm2": L.init_rmsnorm(cfg.d_model),
+            "mlp": L.init_mlp(ks[3], cfg),
+        }
+    else:
+        params["blocks"] = _stack_init(
+            ks[1], cfg.n_layers, lambda k: _init_block(k, cfg))
+    if cfg.family == "encdec":
+        params["enc_in"] = L._dense_init(
+            ks[4], (cfg.frontend_dim or cfg.d_model, cfg.d_model), cfg.jdtype)
+        params["enc_blocks"] = _stack_init(
+            ks[5], cfg.n_enc_layers, lambda k: _init_enc_layer(k, cfg))
+        params["enc_norm"] = L.init_rmsnorm(cfg.d_model)
+    if cfg.family == "vlm":
+        params["vision_blocks"] = _stack_init(
+            ks[4], cfg.n_vision_layers,
+            lambda k: _init_enc_layer(k, cfg, vision=True))
+        params["vision_norm"] = L.init_rmsnorm(cfg.vision_d_model)
+        params["projector"] = L._dense_init(
+            ks[5], (cfg.vision_d_model, cfg.d_model), cfg.jdtype)
+    return _unique_buffers(params)
+
+
+# ---------------------------------------------------------------------------
+# Block application.
+# ---------------------------------------------------------------------------
+
+def _dense_block(p, x, cfg, ctx, *, cache=None, pos=None, causal=True,
+                 enc_out=None, positions=None):
+    """Attention (+cross) + MLP/MoE block.  Returns (x, new_cache, aux)."""
+    if getattr(ctx, "sp_prenorm", False):
+        # gather the raw bf16 residual; norms run on the gathered copy so
+        # no SP collective can be hoisted into the norm's f32 domain
+        x = _sp_gather(ctx, x)
+        attn_in = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    else:
+        attn_in = _sp_gather(ctx, L.rms_norm(x, p["norm1"], cfg.norm_eps))
+    h, kv_new = L.attention(
+        p["attn"], attn_in, cfg,
+        ctx=ctx, kv_cache=None if cache is None else cache.get("kv", {}),
+        pos=pos, causal=causal, positions=positions)
+    x = x + h
+    new_cache = None
+    if kv_new is not None or cache is not None:
+        new_cache = {}
+        if kv_new is not None:
+            new_cache["kv"] = kv_new
+    has_cross = enc_out is not None or (cache is not None
+                                        and "cross" in cache)
+    if has_cross:
+        # cross-attention: enc K/V cached after prefill
+        xc = L.rms_norm(x, p["norm_x"], cfg.norm_eps)
+        if cache is not None and "cross" in cache:
+            ck = cache["cross"]
+            q = (xc @ p["cross"]["wq"]).reshape(
+                x.shape[0], x.shape[1], -1, cfg.hd)
+            out = L._sdpa(q, ck["k"], ck["v"], None, 0.0)
+            h = out @ p["cross"]["wo"]
+            new_cache["cross"] = ck
+        else:
+            h, cross_kv = L.attention(
+                p["cross"], xc, cfg, ctx=ctx, causal=False, x_kv=enc_out,
+                kv_cache={} if cache is not None else None,
+                use_rope=False)
+            if cache is not None and cross_kv is not None:
+                new_cache["cross"] = cross_kv
+        x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if getattr(ctx, "sp_prenorm", False):
+        xin = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    else:
+        xin = _sp_gather(ctx, L.rms_norm(x, p["norm2"], cfg.norm_eps))
+    if "moe" in p:
+        h, aux = moe_ffn(p["moe"], xin, cfg, ctx)
+    else:
+        h = L.mlp(p["mlp"], xin, cfg)
+    return x + h, new_cache, aux
+
+
+def _ssm_block(p, x, cfg, ctx, *, cache=None, pos=None):
+    if getattr(ctx, "sp_prenorm", False):
+        x = _sp_gather(ctx, x)
+        xin = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    else:
+        xin = _sp_gather(ctx, L.rms_norm(x, p["norm"], cfg.norm_eps))
+    h, new_cache = mamba_block(
+        p["mamba"], xin, cfg, cache=cache, pos=pos, unroll=ctx.unroll)
+    return x + h, new_cache
+
+
+def _encoder(params, stack_key, x, cfg, ctx):
+    d = x.shape[-1]
+    heads = cfg.vision_heads if stack_key == "vision_blocks" else cfg.n_heads
+    hd_enc = d // heads
+
+    def body(h, wl):
+        a, _ = L.attention(
+            wl["attn"], L.rms_norm(h, wl["norm1"], cfg.norm_eps), cfg,
+            ctx=ctx, causal=False, use_rope=True, hd=hd_enc)
+        h = h + a
+        h = h + L.mlp(wl["mlp"], L.rms_norm(h, wl["norm2"], cfg.norm_eps),
+                      cfg)
+        return h, None
+    x, _ = _scan(ctx, body, x, params[stack_key])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Embedding assembly per family (prompt construction).
+# ---------------------------------------------------------------------------
+
+def _input_embeds(params, batch, cfg: ModelConfig, ctx) -> jnp.ndarray:
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(cfg.jdtype)
+        v = _encoder(params, "vision_blocks", patches, cfg, ctx)
+        v = L.rms_norm(v, params["vision_norm"], cfg.norm_eps)
+        img = (v @ params["projector"]).astype(cfg.jdtype)
+        txt = L.embed(params["embed"], batch["tokens"])
+        return jnp.concatenate([img, txt], axis=1)
+    return L.embed(params["embed"], batch["tokens"])
+
+
+def _encode(params, batch, cfg, ctx):
+    frames = batch["enc_frames"].astype(cfg.jdtype)
+    x = frames @ params["enc_in"]
+    x = _encoder(params, "enc_blocks", x, cfg, ctx)
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / prefill).
+# ---------------------------------------------------------------------------
+
+def _forward(params, batch, cfg: ModelConfig, ctx: MeshCtx,
+             make_cache: bool, max_len: Optional[int] = None):
+    x = _input_embeds(params, batch, cfg, ctx)
+    B, S, D = x.shape
+    x = ctx.wsc(x, ctx.dp, None, None)
+    enc_out = _encode(params, batch, cfg, ctx) if cfg.family == "encdec" \
+        else None
+    aux_total = jnp.zeros((), jnp.float32)
+
+    pad_to = max_len if (make_cache and max_len) else None
+
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        def body(carry, wl):
+            h, aux = carry
+            h, c_new, a = _dense_block(
+                wl, h, cfg, ctx,
+                cache={} if make_cache else None,
+                enc_out=enc_out)
+            h = _sp_constrain(ctx, h)
+            if make_cache:
+                c_new = _pad_kv(c_new, pad_to)
+            return (h, aux + a), c_new
+        (x, aux_total), caches = _scan(
+            ctx, body, (x, aux_total), params["blocks"])
+    elif cfg.family == "ssm":
+        def body(h, wl):
+            h, c_new = _ssm_block(
+                wl, h, cfg, ctx,
+                cache=init_mamba_cache(cfg, B) if make_cache else None)
+            return _sp_constrain(ctx, h), c_new
+        x, caches = _scan(ctx, body, x, params["blocks"])
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def super_body(carry, wl):
+            h, aux = carry
+
+            def inner(hh, wli):
+                hh, c = _ssm_block(
+                    wli, hh, cfg, ctx,
+                    cache=init_mamba_cache(cfg, B) if make_cache else None)
+                return _sp_constrain(ctx, hh), c
+            h, mcaches = _scan(ctx, inner, h, wl)
+            h, kv_new, a = _dense_block(
+                shared, h, cfg, ctx, cache={} if make_cache else None)
+            if make_cache:
+                kv_new = _pad_kv(kv_new, pad_to)
+            return (h, aux + a), (mcaches, kv_new)
+        (x, aux_total), caches = _scan(
+            ctx, super_body, (x, aux_total), params["blocks"])
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    return logits, aux_total, caches
+
+
+def _pad_kv(c, pad_to):
+    if c is None or pad_to is None or "kv" not in (c or {}):
+        return c
+    k = c["kv"]["k"]
+    S = k.shape[1]
+    if S >= pad_to:
+        return c
+    padw = ((0, 0), (0, pad_to - S), (0, 0), (0, 0))
+    c = dict(c)
+    c["kv"] = {"k": jnp.pad(c["kv"]["k"], padw),
+               "v": jnp.pad(c["kv"]["v"], padw)}
+    return c
+
+
+def train_logits(params, batch, cfg: ModelConfig, ctx: MeshCtx = MeshCtx()):
+    logits, aux, _ = _forward(params, batch, cfg, ctx, make_cache=False)
+    return logits, aux
+
+
+def prefill(params, batch, cfg: ModelConfig, ctx: MeshCtx = MeshCtx(),
+            max_len: Optional[int] = None):
+    logits, _, caches = _forward(params, batch, cfg, ctx, make_cache=True,
+                                 max_len=max_len)
+    return logits[:, -1], caches
+
+
+# ---------------------------------------------------------------------------
+# Decode.
+# ---------------------------------------------------------------------------
+
+def decode_step(params, tokens, cache, pos, cfg: ModelConfig,
+                ctx: MeshCtx = MeshCtx(), enc_out=None):
+    """tokens: (B, 1); pos: scalar int32 (current write position)."""
+    x = L.embed(params["embed"], tokens)
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        def body(h, xs):
+            wl, cl = xs
+            h, c_new, _ = _dense_block(
+                wl, h, cfg, ctx, cache=cl, pos=pos, enc_out=enc_out,
+                positions=positions)
+            return h, c_new
+        x, new_cache = _scan(ctx, body, x, (params["blocks"], cache))
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            wl, cl = xs
+            h, c_new = _ssm_block(wl, h, cfg, ctx, cache=cl, pos=pos)
+            return h, c_new
+        x, new_cache = _scan(ctx, body, x, (params["blocks"], cache))
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def super_body(h, xs):
+            wl, (mcaches, kvc) = xs
+
+            def inner(hh, xsi):
+                wli, cli = xsi
+                hh, c = _ssm_block(wli, hh, cfg, ctx, cache=cli, pos=pos)
+                return hh, c
+            h, mnew = _scan(ctx, inner, h, (wl, mcaches))
+            h, kv_new, _ = _dense_block(
+                shared, h, cfg, ctx, cache=kvc, pos=pos, positions=positions)
+            return h, (mnew, kv_new)
+        x, new_cache = _scan(ctx, super_body, x,
+                             (params["blocks"], cache))
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache allocation (for dry-run decode cells and the serving engine).
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dt = cfg.jdtype
+    kvshape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"kv": {"k": jnp.zeros(kvshape, dt),
+                       "v": jnp.zeros(kvshape, dt)}}
+    if cfg.family == "encdec":
+        cross = (cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.hd)
+        return {"kv": {"k": jnp.zeros(kvshape, dt),
+                       "v": jnp.zeros(kvshape, dt)},
+                "cross": {"k": jnp.zeros(cross, dt),
+                          "v": jnp.zeros(cross, dt)}}
+    if cfg.family == "ssm":
+        mc = init_mamba_cache(cfg, batch)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[None], (cfg.n_layers,) + a.shape), mc)
+    if cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        mc = init_mamba_cache(cfg, batch)
+        mstack = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[None, None],
+                (n_super, cfg.attn_every) + a.shape), mc)
+        kvshape = (n_super, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        kv = {"kv": {"k": jnp.zeros(kvshape, dt),
+                     "v": jnp.zeros(kvshape, dt)}}
+        return (mstack, kv)
+    raise ValueError(cfg.family)

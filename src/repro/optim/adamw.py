@@ -1,0 +1,89 @@
+"""AdamW with fp32 master weights, decay masking and global-norm clipping.
+
+Model params stay bf16 (what matmuls consume); the optimizer carries fp32
+master copies + moments.  The state pytree mirrors the param tree leaf-for-
+leaf, so the same sharding specs apply (m/v/master inherit the param's
+PartitionSpec).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+
+
+def _decay_mask(params):
+    """No weight decay on vectors/scalars (norm scales, biases, A_log...)."""
+    return jax.tree.map(lambda p: jnp.asarray(float(p.ndim >= 2)), params)
+
+
+def init(params) -> Dict[str, Any]:
+    # copy=True: fp32 leaves (norm scales) would otherwise alias the live
+    # param buffer and break (params, opt_state) double-donation.
+    f32 = lambda p: jnp.array(p, jnp.float32, copy=True)
+    # p * 0 (not jnp.zeros) so every moment leaf owns its buffer — shared
+    # zero buffers break (params, opt_state) double-donation in train_step.
+    zeros = lambda p: p.astype(jnp.float32) * 0.0
+    return {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(grads, state, params, cfg: AdamWConfig):
+    """Returns (new_params_bf16, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cfg.schedule(step) if cfg.schedule is not None else cfg.lr
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else 1.0
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    mask = _decay_mask(params)
+
+    def upd(g, m, v, w, dk):
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        w = w - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                      + cfg.weight_decay * dk * w)
+        return m, v, w
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], state["master"],
+                       mask)
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(
+        x, tuple))
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(
+        x, tuple))
+    master = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(
+        x, tuple))
+    new_params = jax.tree.map(
+        lambda w, p: w.astype(p.dtype), master, params)
+    new_state = {"master": master, "m": m, "v": v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

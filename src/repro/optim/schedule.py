@@ -1,0 +1,32 @@
+"""LR schedules as pure step -> lr functions."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(1, warmup)
+        t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = peak_lr * (floor_frac + (1 - floor_frac)
+                         * 0.5 * (1.0 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def warmup_linear(peak_lr: float, warmup: int, total: int):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(1, warmup)
+        t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        return jnp.where(step < warmup, warm, peak_lr * (1.0 - t))
+    return fn
+
+
+def constant(lr: float):
+    def fn(step):
+        return jnp.full((), lr, jnp.float32)
+    return fn

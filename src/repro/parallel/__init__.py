@@ -1,0 +1,2 @@
+from .mesh_ctx import MeshCtx, make_ctx
+from .sharding import ParallelConfig, make_parallel_cfg, param_pspecs

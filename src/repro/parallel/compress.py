@@ -1,0 +1,93 @@
+"""Quantized (int8 + per-chunk scale) gradient all-reduce with error feedback.
+
+Ring all-reduce moves ~2x the gradient bytes per device; quantizing the
+exchanged chunks to int8 cuts the wire volume ~4x (scales are negligible).
+The schedule is reduce-scatter-then-all-gather expressed with
+``lax.all_to_all`` + local sum + ``lax.all_gather`` inside shard_map, i.e.
+the same algorithm NCCL/ICI rings implement, with the quantizer applied to
+every wire transfer.  Error feedback (the residual of each quantization is
+carried and added to the next round) keeps convergence loss negligible —
+the property tests check exactness bounds and error-feedback accumulation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def quantize(x, axis: Optional[int] = None):
+    """Symmetric int8 quantization with a f32 scale per tensor (or axis)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _ar_body(flat, axis_name: str, n: int):
+    """flat: f32[n * chunk] local gradient shard-to-be."""
+    chunks = flat.reshape(n, -1)
+    q, s = quantize(chunks, axis=1)
+    # reduce-scatter: device i receives chunk i from everyone
+    q_x = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                             tiled=False)
+    s_x = jax.lax.all_to_all(s, axis_name, split_axis=0, concat_axis=0,
+                             tiled=False)
+    partial = jnp.sum(dequantize(q_x, s_x), axis=0)     # (chunk,)
+    q2, s2 = quantize(partial[None, :], axis=1)
+    # all-gather the reduced chunks
+    qg = jax.lax.all_gather(q2[0], axis_name)            # (n, chunk)
+    sg = jax.lax.all_gather(s2[0], axis_name)
+    return dequantize(qg, sg.reshape(n, 1)).reshape(-1)
+
+
+def quantized_allreduce(grads, mesh, axis_name: str = "data"):
+    """All-reduce (sum) a gradient pytree over ``axis_name`` with int8 wire
+    format.  Grads enter replicated-per-shard (each device holds its own
+    microbatch gradient) and leave summed + replicated."""
+    n = mesh.shape[axis_name]
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    sizes = [int(np.prod(l.shape)) for l in leaves]
+    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1)
+                            for l in leaves])
+    pad = (-flat.shape[0]) % n
+    flat = jnp.pad(flat, (0, pad))
+
+    other = tuple(a for a in mesh.axis_names if a != axis_name)
+    out = jax.shard_map(
+        functools.partial(_ar_body, axis_name=axis_name, n=n),
+        mesh=mesh,
+        in_specs=P(),
+        out_specs=P(),
+        check_vma=False,
+    )(flat)
+    out = out[:flat.shape[0] - pad] if pad else out
+    res = []
+    off = 0
+    for l, sz in zip(leaves, sizes):
+        res.append(out[off:off + sz].reshape(l.shape).astype(l.dtype))
+        off += sz
+    return jax.tree_util.tree_unflatten(treedef, res)
+
+
+class ErrorFeedback:
+    """Carry quantization residuals across steps (host-side pytree)."""
+
+    def __init__(self):
+        self.residual = None
+
+    def apply(self, grads):
+        if self.residual is not None:
+            grads = jax.tree.map(jnp.add, grads, self.residual)
+        q = jax.tree.map(lambda g: dequantize(*quantize(g)), grads)
+        self.residual = jax.tree.map(jnp.subtract, grads, q)
+        return q

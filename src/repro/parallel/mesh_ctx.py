@@ -1,0 +1,60 @@
+"""Mesh context threaded through model code.
+
+Decouples model definitions from the concrete mesh: models only see axis
+*roles* (dp/tp/sp).  ``MeshCtx(None)`` is the single-device smoke-test path —
+all sharding hooks become no-ops and MoE dispatch runs un-mapped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    mesh: Optional[Mesh] = None
+    dp: Tuple[str, ...] = ("data",)      # batch / fsdp axes
+    tp: str = "model"                    # tensor-parallel axis
+    use_shard_map_moe: bool = True
+    sequence_parallel: bool = False
+    remat: bool = False                  # activation-checkpoint scan bodies
+    unroll: bool = False                 # unroll layer scans (cost probes)
+    moe_impl: str = "tp"                 # tp (FSDP+TP baseline) | ep (a2a)
+    sp_barrier: bool = False             # pin bf16 before SP collectives
+    sp_prenorm: bool = False             # gather the raw bf16 residual
+                                         # before the norm (not after)
+    pure_dp: bool = False                # ZeRO-3: no TP constraints
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None
+
+    def wsc(self, x, *spec):
+        """with_sharding_constraint if a mesh is active, else identity."""
+        if not self.active:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    @property
+    def dp_size(self) -> int:
+        if not self.active:
+            return 1
+        return int(
+            __import__("numpy").prod([self.mesh.shape[a] for a in self.dp]))
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp] if self.active else 1
+
+
+def make_ctx(mesh: Optional[Mesh]) -> MeshCtx:
+    if mesh is None:
+        return MeshCtx(None)
+    names = mesh.axis_names
+    dp = tuple(a for a in names if a != "model")
+    return MeshCtx(mesh=mesh, dp=dp, tp="model")

@@ -1,0 +1,214 @@
+"""Sharding rules: DP / FSDP / TP / EP / SP placement for every param family.
+
+The rules are *name-based on trailing dims*: each leaf name maps to a spec
+for its last-k dims; any extra leading dims (layer-stacking from
+scan-over-layers, or the hybrid's (n_super, attn_every) nesting) are padded
+with ``None``.  This makes one rule table cover plain params, scanned
+stacks, and optimizer-state mirrors.
+
+Axes:
+  * ``model``  (tp): Megatron-style tensor parallelism — attention heads,
+    FFN hidden, MoE expert FFN hidden, SSD heads, vocab.
+  * ``data``   (fsdp): storage sharding of the non-TP weight dim; XLA's
+    scan-over-layers resharding turns this into per-layer FSDP all-gathers.
+  * ``("pod","data")`` (dp): batch dim of activations/inputs.  FSDP is kept
+    *within* a pod (gathers ride ICI, never the cross-pod links).
+KV caches pick heads/head-dim/replicated sharding per-arch by divisibility.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from .mesh_ctx import MeshCtx
+
+# leaf name -> spec for trailing dims (fsdp axis = F, tp axis = T below)
+_F = "__fsdp__"
+_T = "__tp__"
+
+_RULES = {
+    "tok": (_T, _F),
+    "unembed": (_F, _T),
+    "scale": (None,),
+    "wq": (_F, _T), "wk": (_F, _T), "wv": (_F, _T), "wo": (_T, _F),
+    "bq": (_T,), "bk": (_T,), "bv": (_T,),
+    "w_gate": (_F, _T), "w_up": (_F, _T), "w_down": (_T, _F),
+    "b_up": (_T,), "b_down": (None,),
+    "wg": (None, None),
+    "z_proj": (_F, _T), "x_proj": (_F, _T),
+    "bc_proj": (_F, None), "dt_proj": (_F, None),
+    "conv_x_w": (None, _T), "conv_x_b": (_T,),
+    "conv_bc_w": (None, None), "conv_bc_b": (None,),
+    "A_log": (None,), "D": (None,), "dt_bias": (None,),
+    "out_proj": (_T, _F),
+    "projector": (None, _F),
+    "enc_in": (None, _F),
+}
+
+# MoE expert tensors carry a leading expert dim that must stay unsharded in
+# the baseline design (experts replicated across data, TP inside) — the
+# generic leading-None padding already does that.
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    fsdp: bool = True
+    fsdp_axis: str = "data"
+    tp_axis: str = "model"
+    dp_axes: Tuple[str, ...] = ("data",)
+    kv_mode: str = "auto"     # auto | heads | head_dim | replicate
+    remat: str = "none"       # none | block
+    # ZeRO-3 mode: no tensor parallelism; weights/optimizer sharded over
+    # every mesh axis, batch data-parallel over every axis.  Wins for small
+    # dense models where per-layer weight gathers are cheaper than
+    # per-layer activation gathers (B_loc*S*D >> layer params).
+    pure_fsdp: bool = False
+    # axis sizes, for divisibility guards (a dim that does not divide its
+    # axis size is replicated instead — e.g. whisper's vocab 51865 % 16 != 0)
+    fsdp_size: int = 1
+    tp_size: int = 1
+    dp_size: int = 1
+
+    def axis_size(self, axis) -> int:
+        if axis == self.tp_axis:
+            return self.tp_size
+        if axis == self.fsdp_axis:
+            return self.fsdp_size
+        if axis == self.dp_axes:
+            return self.dp_size
+        if axis == "pod":
+            return max(1, self.dp_size // max(1, self.fsdp_size))
+        return 1
+
+
+def _guard(spec_list, shape, pcfg: ParallelConfig):
+    """Drop axis assignments whose dim does not divide the axis size."""
+    out = []
+    for dim, axis in zip(shape, spec_list):
+        if axis is None:
+            out.append(None)
+            continue
+        if isinstance(axis, tuple):
+            size = 1
+            for a in axis:
+                size *= pcfg.axis_size(a)
+            if axis == pcfg.dp_axes:
+                size = pcfg.dp_size
+        else:
+            size = pcfg.axis_size(axis)
+        out.append(axis if dim % max(1, size) == 0 else None)
+    return out
+
+
+def _resolve(spec, pcfg: ParallelConfig, leaf):
+    trans = []
+    for s in spec:
+        if s == _F:
+            if pcfg.pure_fsdp:
+                trans.append((pcfg.fsdp_axis, pcfg.tp_axis))
+            else:
+                trans.append(pcfg.fsdp_axis if pcfg.fsdp else None)
+        elif s == _T:
+            trans.append(None if pcfg.pure_fsdp else pcfg.tp_axis)
+        else:
+            trans.append(s)
+    pad = leaf.ndim - len(trans)
+    full = [None] * pad + trans
+    return P(*_guard(full, leaf.shape, pcfg))
+
+
+def param_pspecs(params_shape, pcfg: ParallelConfig):
+    """Map a params (or optimizer-state) shape-pytree to PartitionSpecs."""
+
+    def rule(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        spec = _RULES.get(name)
+        if spec is None:
+            return P(*([None] * leaf.ndim))
+        if len(spec) > leaf.ndim:
+            spec = spec[-leaf.ndim:]
+        return _resolve(spec, pcfg, leaf)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def kv_cache_pspecs(cache_shape, cfg: ModelConfig, pcfg: ParallelConfig,
+                    tp_size: int):
+    """Specs for a decode cache pytree (leading layer-stack dims)."""
+    mode = pcfg.kv_mode
+    if mode == "auto":
+        if cfg.n_kv_heads and cfg.n_kv_heads % tp_size == 0:
+            mode = "heads"
+        elif cfg.hd % tp_size == 0:
+            mode = "head_dim"
+        else:
+            mode = "replicate"
+    dp = pcfg.dp_axes
+    tp = pcfg.tp_axis
+
+    def rule(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        if name in ("k", "v"):
+            # (..., B, S, KV, hd)
+            tail = {
+                "heads": [dp, None, tp, None],
+                "head_dim": [dp, None, None, tp],
+                "replicate": [dp, None, None, None],
+            }[mode]
+        elif name == "state":      # (..., B, h, hp, n)
+            tail = [dp, tp, None, None]
+        elif name == "conv_x":     # (..., B, K-1, di)
+            tail = [dp, None, tp]
+        elif name == "conv_bc":
+            tail = [dp, None, None]
+        else:
+            return P(*([None] * leaf.ndim))
+        pad = leaf.ndim - len(tail)
+        full = [None] * pad + tail
+        return P(*_guard(full, leaf.shape, pcfg))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def batch_pspecs(batch_shape, pcfg: ParallelConfig):
+    dp = pcfg.dp_axes
+
+    def rule(leaf):
+        full = [dp] + [None] * (leaf.ndim - 1)
+        return P(*_guard(full, leaf.shape, pcfg))
+
+    return jax.tree.map(rule, batch_shape)
+
+
+def to_named(tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_parallel_cfg(mesh: Optional[Mesh], **kw) -> ParallelConfig:
+    if mesh is None:
+        return ParallelConfig(fsdp=False, dp_axes=(), **kw)
+    if kw.get("pure_fsdp"):
+        dp_axes = tuple(mesh.axis_names)     # batch over every axis
+    else:
+        dp_axes = tuple(a for a in mesh.axis_names if a != "model")
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    return ParallelConfig(
+        dp_axes=dp_axes, dp_size=dp_size,
+        fsdp_size=int(mesh.shape.get("data", 1)),
+        tp_size=int(mesh.shape.get("model", 1)), **kw)

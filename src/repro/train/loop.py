@@ -1,0 +1,196 @@
+"""Production training loop: checkpointing, fault tolerance, elasticity.
+
+Design points exercised by the tests:
+  * deterministic data-by-step (restart/elastic replay is bit-exact),
+  * atomic async checkpoints every ``ckpt_every`` steps,
+  * crash recovery: ``run()`` resumes from the latest checkpoint, retries a
+    failed step up to ``max_step_retries`` (transient-fault model: lost
+    node -> backend restarts -> step replays from the last good state),
+  * straggler mitigation: a step exceeding ``straggler_factor`` x the
+    rolling median is logged and counted (on a real pod: the driver
+    re-slices the batch to skip the straggler's shard; here the hook is the
+    monitoring + accounting layer the pod driver would consume),
+  * elastic re-mesh: ``Trainer.remesh`` rebuilds the jitted step for a new
+    mesh and re-places the restored state (save on mesh A / restore on
+    mesh B path of checkpoint/ckpt.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import ckpt as ckpt_lib
+from ..configs import ShapeSpec
+from ..data.synthetic import SyntheticTokens
+from ..launch import steps as steps_lib
+from ..models import init_params
+from ..models.config import ModelConfig
+from ..optim import adamw
+from ..parallel import sharding as shard_rules
+from ..parallel.mesh_ctx import MeshCtx, make_ctx
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: Optional[str] = None
+    max_step_retries: int = 2
+    straggler_factor: float = 3.0
+    microbatches: int = 1
+    log_every: int = 10
+    remat: bool = False
+    lr: float = 3e-4
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, shape: ShapeSpec,
+                 data: SyntheticTokens, tcfg: TrainConfig,
+                 mesh=None, seed: int = 0,
+                 fault_hook: Optional[Callable[[int], None]] = None):
+        self.cfg = cfg
+        self.shape = shape
+        self.data = data
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.fault_hook = fault_hook
+        self.step = 0
+        self.metrics_log: List[Dict[str, float]] = []
+        self.straggler_events = 0
+        self.recoveries = 0
+        self._durations: List[float] = []
+
+        params = init_params(jax.random.PRNGKey(seed), cfg)
+        opt_state = adamw.init(params)
+        self._build(mesh)
+        self.params, self.opt_state = self._place(params, opt_state)
+        self.ckpt = (ckpt_lib.AsyncCheckpointer(tcfg.ckpt_dir)
+                     if tcfg.ckpt_dir else None)
+
+    # -- construction ---------------------------------------------------------
+    def _build(self, mesh):
+        ctx = make_ctx(mesh)
+        ctx = dataclasses.replace(ctx, remat=self.tcfg.remat)
+        opt_cfg = adamw.AdamWConfig(lr=self.tcfg.lr)
+        fn = steps_lib.make_train_step(
+            self.cfg, ctx, opt_cfg, microbatches=self.tcfg.microbatches)
+        if mesh is not None:
+            in_sh, out_sh = steps_lib.shardings_for(
+                self.cfg, self.shape, mesh)
+            self._step_fn = jax.jit(fn, in_shardings=in_sh,
+                                    out_shardings=out_sh,
+                                    donate_argnums=(0, 1))
+            self._shardings = in_sh
+        else:
+            self._step_fn = jax.jit(fn, donate_argnums=(0, 1))
+            self._shardings = None
+
+    def _place(self, params, opt_state):
+        if self._shardings is None:
+            return params, opt_state
+        p_sh, o_sh, _ = self._shardings
+        return (jax.device_put(params, p_sh),
+                jax.device_put(opt_state, o_sh))
+
+    # -- checkpoint/restore ---------------------------------------------------
+    def save(self):
+        if self.ckpt is None:
+            return
+        self.ckpt.save(self.step,
+                       {"params": self.params, "opt": self.opt_state},
+                       extra={"data": self.data.state_dict(),
+                              "step": self.step})
+
+    def restore(self) -> bool:
+        if self.tcfg.ckpt_dir is None:
+            return False
+        latest = ckpt_lib.latest_step(self.tcfg.ckpt_dir)
+        if latest is None:
+            return False
+        like = {"params": self.params, "opt": self.opt_state}
+        shardings = None
+        if self._shardings is not None:
+            p_sh, o_sh, _ = self._shardings
+            shardings = {"params": p_sh, "opt": o_sh}
+        tree, step, extra = ckpt_lib.restore(
+            self.tcfg.ckpt_dir, like, shardings=shardings)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.step = int(extra["step"])
+        self.data.load_state_dict(extra["data"])
+        return True
+
+    def remesh(self, mesh) -> None:
+        """Elastic scaling: rebuild for a new mesh, re-place live state."""
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                            {"params": self.params, "opt": self.opt_state})
+        self.mesh = mesh
+        self._build(mesh)
+        self.params, self.opt_state = self._place(host["params"],
+                                                  host["opt"])
+
+    # -- the loop ---------------------------------------------------------------
+    def _one_step(self, batch):
+        t0 = time.time()
+        self.params, self.opt_state, metrics = self._step_fn(
+            self.params, self.opt_state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.time() - t0
+        self._durations.append(dt)
+        med = float(np.median(self._durations[-20:]))
+        if len(self._durations) > 5 and dt > self.tcfg.straggler_factor * med:
+            self.straggler_events += 1
+            metrics["straggler"] = 1.0
+        metrics["step_time_s"] = dt
+        return metrics
+
+    def run(self) -> Dict[str, Any]:
+        self.restore()
+        while self.step < self.tcfg.total_steps:
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.data.batch_at(self.step).items()}
+            tries = 0
+            while True:
+                try:
+                    if self.fault_hook is not None:
+                        self.fault_hook(self.step)
+                    metrics = self._one_step(batch)
+                    break
+                except _RECOVERABLE as e:  # noqa: PERF203
+                    tries += 1
+                    self.recoveries += 1
+                    if tries > self.tcfg.max_step_retries:
+                        raise
+                    # restart-from-checkpoint path (params may have been
+                    # donated/corrupted mid-step)
+                    if not self.restore():
+                        params = init_params(
+                            jax.random.PRNGKey(0), self.cfg)
+                        self.params, self.opt_state = self._place(
+                            params, adamw.init(params))
+            self.step += 1
+            self.data.step = self.step
+            metrics["step"] = self.step
+            self.metrics_log.append(metrics)
+            if self.step % self.tcfg.ckpt_every == 0:
+                self.save()
+        if self.ckpt is not None:
+            self.save()
+            self.ckpt.wait()
+        return {
+            "final_loss": self.metrics_log[-1]["loss"],
+            "steps": self.step,
+            "stragglers": self.straggler_events,
+            "recoveries": self.recoveries,
+        }
+
+
+class InjectedFault(RuntimeError):
+    """Raised by test fault hooks to emulate a lost worker."""
+
+
+_RECOVERABLE = (InjectedFault, jax.errors.JaxRuntimeError)

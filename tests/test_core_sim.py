@@ -1,0 +1,173 @@
+"""Track A (HMS simulator) behaviour tests — the paper's claims as asserts."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (HMSConfig, amil_fits_in_column, make_trace,
+                        metadata_bits_per_row, simulate)
+from repro.core.traces import WORKLOADS
+
+N = 60_000  # trace length for CI speed
+
+
+def run(workload, n=N, **kw):
+    t = make_trace(workload, n=n)
+    cfg = HMSConfig(footprint=t.footprint, **kw).validate()
+    return simulate(t, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Mechanism-level invariants.
+# ---------------------------------------------------------------------------
+
+def test_amil_metadata_fits_one_column():
+    """§III-B: 256B lines x 2KiB rows -> 48 bits of metadata < one 32B col."""
+    cfg = HMSConfig().validate()
+    assert metadata_bits_per_row(cfg) == 48
+    assert amil_fits_in_column(cfg)
+
+
+def test_amil_excluded_fraction():
+    """The last column is 1/64 = 1.56% of a row (paper: 'only 1.56%')."""
+    from repro.core.traces import preprocess
+    t = make_trace("zipf", n=N)
+    pre = preprocess(t, HMSConfig(footprint=t.footprint))
+    frac = pre["amil_excluded"].mean()
+    assert 0.005 < frac < 0.03
+
+
+def test_hit_counts_consistent():
+    r = run("zipf")
+    c = r.counters
+    assert c["hit_r"] + c["miss_r"] + c["hit_w"] + c["miss_w"] == N
+    assert c["fills"] <= c["miss_r"] + c["miss_w"]
+    assert c["dirty_evicts"] <= c["fills"]
+
+
+def test_bypass_reduces_fill_traffic():
+    """Fig. 13: bypass cuts fill+writeback traffic vs no-bypass."""
+    r_byp = run("sssp_ttc")
+    r_nb = run("sssp_ttc", policy="no_bypass")
+    fills_byp = r_byp.traffic_bytes["dram_fill"] \
+        + r_byp.traffic_bytes["scm_wb_wr"]
+    fills_nb = r_nb.traffic_bytes["dram_fill"] \
+        + r_nb.traffic_bytes["scm_wb_wr"]
+    assert fills_byp < 0.75 * fills_nb
+    assert r_byp.total_traffic < r_nb.total_traffic
+
+
+def test_bypass_mostly_first_level():
+    """§IV-B: most bypasses are decided by the level-1 comparison (88.1%
+    in the paper; we require a clear majority)."""
+    r = run("bfs_tu")
+    assert r.bypass_l1_frac > 0.6
+
+
+def test_ctc_reduces_probe_traffic():
+    r_ctc = run("stencil", policy="no_bypass")
+    r_noctc = run("stencil", policy="no_bypass_no_ctc")
+    assert r_ctc.traffic_bytes["dram_probe"] < \
+        0.5 * r_noctc.traffic_bytes["dram_probe"]
+    assert r_ctc.ctc_hit_rate > 0.9
+
+
+def test_amil_beats_tad_on_probe_traffic():
+    """Fig. 18: TAD needs 8 accesses per CTC sector fill, AMIL one."""
+    r_amil = run("bfs_tu", tag_layout="amil")
+    r_tad = run("bfs_tu", tag_layout="tad")
+    assert r_tad.traffic_bytes["dram_probe"] > \
+        3.0 * r_amil.traffic_bytes["dram_probe"]
+
+
+def test_write_filtering():
+    """Writes should hit the DRAM cache at much higher rates than reads on
+    write-random graph workloads (paper: sssp write hit rate 99.6%)."""
+    r = run("sssp_ttc")
+    assert r.hit_rate_write > r.hit_rate_read
+    assert r.hit_rate_write > 0.5
+
+
+# ---------------------------------------------------------------------------
+# System-level orderings (Fig. 11 trends).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("workload", ["sssp_ttc", "bfs_tu", "kcore"])
+def test_hms_beats_oversubscribed_hbm(workload):
+    """Irregular workloads: UM prefetchers are ineffective (paper §II-A).
+    Regular streaming traces (stencil) are prefetch-friendly at this trace
+    scale and land near parity — consistent with the paper's pathfnd/2DConv
+    rows, checked in test_hms_competitive_on_regular below."""
+    r_hms = run(workload)
+    r_hbm = run(workload, organization="hbm")
+    assert r_hms.runtime_cycles < r_hbm.runtime_cycles
+
+
+def test_hms_competitive_on_regular():
+    r_hms = run("stencil")
+    r_hbm = run("stencil", organization="hbm")
+    assert r_hms.runtime_cycles < 3.0 * r_hbm.runtime_cycles
+
+
+def test_hms_beats_scm_only():
+    r_hms = run("sssp_ttc")
+    r_scm = run("sssp_ttc", organization="scm")
+    assert r_hms.runtime_cycles < r_scm.runtime_cycles
+
+
+def test_inf_hbm_is_lower_bound():
+    for workload in ["sssp_ttc", "stencil"]:
+        r_inf = run(workload, organization="inf_hbm")
+        for org in ["hms", "scm", "hbm"]:
+            r = run(workload, organization=org)
+            assert r_inf.runtime_cycles <= r.runtime_cycles * 1.001
+
+
+def test_shared_bus_beats_separate():
+    """Fig. 6c / Fig. 15a: HMS shared channels outperform split buses."""
+    r_sh = run("sssp_ttc")
+    r_sep = run("sssp_ttc", organization="separate")
+    assert r_sh.runtime_cycles <= r_sep.runtime_cycles
+
+
+def test_prior_work_more_scm_writes():
+    """§IV-B: BEAR_i / McCache_i push more write traffic into SCM.  Needs a
+    long enough trace that steady-state reuse dominates cold-fill writeback
+    churn (at very short traces HMS's 256B writebacks briefly exceed
+    McCache's 32B write-throughs)."""
+    r_hms = run("sssp_ttc", n=150_000)
+    hms_w = (r_hms.counters["demand_scm_wr"] + r_hms.counters["wb_scm_wr"])
+    for pol in ["bear", "mccache"]:
+        r = run("sssp_ttc", n=150_000, policy=pol)
+        assert (r.counters["demand_scm_wr"] + r.counters["wb_scm_wr"]) \
+            > hms_w, pol
+
+
+# ---------------------------------------------------------------------------
+# Power / modes (§III-E).
+# ---------------------------------------------------------------------------
+
+def test_scm_throttling_reduces_power():
+    r = run("stencil")
+    r_thr = run("stencil", throttle_act=True, throttle_wr=True)
+    assert r_thr.power_w < r.power_w
+    assert r_thr.runtime_cycles >= r.runtime_cycles
+
+
+def test_slc_mode_faster_than_tlc():
+    r_slc = run("sssp_ttc", scm_mode="slc", policy="no_bypass_no_ctc")
+    r_tlc = run("sssp_ttc", scm_mode="tlc", policy="no_bypass_no_ctc")
+    assert r_slc.runtime_cycles < r_tlc.runtime_cycles
+
+
+def test_energy_breakdown_positive():
+    r = run("zipf")
+    assert all(v >= 0 for v in r.energy_pj.values())
+    assert sum(r.energy_pj.values()) > 0
+
+
+def test_all_workloads_simulate():
+    for name in WORKLOADS:
+        r = run(name, n=20_000)
+        assert np.isfinite(r.runtime_cycles) and r.runtime_cycles > 0

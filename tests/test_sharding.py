@@ -1,0 +1,109 @@
+"""Sharding-rule unit tests + a subprocess dry-run integration check."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch import steps as steps_lib
+from repro.parallel import sharding as shard_rules
+
+
+def _pcfg():
+    return shard_rules.ParallelConfig(
+        dp_axes=("data",), dp_size=16, fsdp_size=16, tp_size=16)
+
+
+def test_param_rules_dense():
+    cfg = get_config("granite-8b")
+    specs = steps_lib.param_specs(cfg)
+    ps = shard_rules.param_pspecs(specs, _pcfg())
+    # embeddings: vocab on model, d_model on data
+    assert ps["embed"]["tok"] == P("model", "data")
+    # stacked attention weights: (L, D, H*hd) -> (None, data, model)
+    assert ps["blocks"]["attn"]["wq"] == P(None, "data", "model")
+    assert ps["blocks"]["attn"]["wo"] == P(None, "model", "data")
+    assert ps["blocks"]["mlp"]["w_down"] == P(None, "model", "data")
+    assert ps["final_norm"]["scale"] == P(None)
+
+
+def test_param_rules_divisibility_guard():
+    """whisper vocab 51865 % 16 != 0 -> vocab dim must not be sharded."""
+    cfg = get_config("whisper-tiny")
+    specs = steps_lib.param_specs(cfg)
+    ps = shard_rules.param_pspecs(specs, _pcfg())
+    assert ps["embed"]["tok"] == P(None, "data")
+
+
+def test_param_rules_moe():
+    cfg = get_config("grok-1-314b")
+    specs = steps_lib.param_specs(cfg)
+    ps = shard_rules.param_pspecs(specs, _pcfg())
+    # (L, E, D, F): experts unsharded, FSDP on D, TP on F
+    assert ps["blocks"]["moe"]["w_gate"] == P(None, None, "data", "model")
+    assert ps["blocks"]["moe"]["w_down"] == P(None, None, "model", "data")
+    assert ps["blocks"]["moe"]["wg"] == P(None, None, None)
+
+
+def test_param_rules_ssm():
+    cfg = get_config("mamba2-1.3b")
+    specs = steps_lib.param_specs(cfg)
+    ps = shard_rules.param_pspecs(specs, _pcfg())
+    m = ps["blocks"]["mamba"]
+    assert m["x_proj"] == P(None, "data", "model")      # heads TP
+    assert m["bc_proj"] == P(None, "data", None)        # states replicated
+    assert m["out_proj"] == P(None, "model", "data")
+
+
+def test_kv_cache_rules_auto_mode():
+    pcfg = _pcfg()
+    # zamba2 kv=32 divisible by 16 -> heads mode
+    cfg = get_config("zamba2-2.7b")
+    cache = steps_lib.cache_specs(cfg, SHAPES["decode_32k"])
+    ps = shard_rules.kv_cache_pspecs(cache, cfg, pcfg, 16)
+    kv = ps[1]["kv"]["k"]
+    assert kv == P(None, ("data",), None, "model", None)
+    # granite kv=8 -> head_dim mode (128 % 16 == 0)
+    cfg = get_config("granite-8b")
+    cache = steps_lib.cache_specs(cfg, SHAPES["decode_32k"])
+    ps = shard_rules.kv_cache_pspecs(cache, cfg, pcfg, 16)
+    assert ps["kv"]["k"] == P(None, ("data",), None, None, "model")
+
+
+def test_batch_rules_guard_small_batch():
+    """long_500k batch=1 cannot shard over dp=16 -> replicated."""
+    cfg = get_config("mamba2-1.3b")
+    b = steps_lib.batch_specs(cfg, SHAPES["long_500k"], with_labels=False)
+    ps = shard_rules.batch_pspecs(b, _pcfg())
+    assert ps["tokens"] == P(None, None)
+
+
+def test_opt_state_mirrors_param_specs():
+    cfg = get_config("qwen2.5-3b")
+    o = steps_lib.opt_specs(cfg)
+    ps = shard_rules.param_pspecs(o, _pcfg())
+    assert ps["m"]["blocks"]["attn"]["wq"] == P(None, "data", "model")
+    assert ps["master"]["blocks"]["attn"]["wq"] == P(None, "data", "model")
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_smoke():
+    """Full lower+compile of one cheap cell on the production mesh (the
+    512-device env var must be set before jax init -> subprocess)."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-tiny", "--shape", "decode_32k", "--json",
+         "/tmp/_dryrun_test.json"],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))), timeout=480)
+    assert out.returncode == 0, out.stdout + out.stderr
+    with open("/tmp/_dryrun_test.json") as f:
+        r = json.load(f)[0]
+    assert r["n_devices"] == 256
+    assert r["deploy"]["per_device_bytes"]["total_live"] > 0
