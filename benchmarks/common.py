@@ -10,7 +10,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import HMSConfig, make_trace, simulate
+from repro.core import HMSConfig, make_trace, simulate, simulate_many
 
 # representative subset (full suite via REPRO_BENCH_FULL=1)
 WORKLOADS = ["stencil", "pathfnd", "bfs_tu", "sssp_ttc", "kcore",
@@ -31,8 +31,12 @@ def trace(name):
     return _trace_cache[name]
 
 
+def _key(workload, cfg_kw):
+    return (workload, tuple(sorted(cfg_kw.items())))
+
+
 def sim(workload: str, **cfg_kw):
-    key = (workload, tuple(sorted(cfg_kw.items())))
+    key = _key(workload, cfg_kw)
     if key in _result_cache:
         return _result_cache[key]
     t = trace(workload)
@@ -42,6 +46,25 @@ def sim(workload: str, **cfg_kw):
     r.wall_s = time.time() - t0
     _result_cache[key] = r
     return r
+
+
+def sim_many(workload: str, cfg_kws):
+    """Batched sweep: run every uncached config point of ``workload`` through
+    ``simulate_many`` (one compile + one vmapped device loop per compatible
+    group) and fill the shared result cache.  Returns results in order."""
+    cfg_kws = list(cfg_kws)
+    t = trace(workload)
+    missing = [kw for kw in cfg_kws
+               if _key(workload, kw) not in _result_cache]
+    if missing:
+        cfgs = [HMSConfig(footprint=t.footprint, **kw) for kw in missing]
+        t0 = time.time()
+        rs = simulate_many(t, cfgs)
+        per = (time.time() - t0) / len(rs)
+        for kw, r in zip(missing, rs):
+            r.wall_s = per
+            _result_cache[_key(workload, kw)] = r
+    return [_result_cache[_key(workload, kw)] for kw in cfg_kws]
 
 
 def emit(rows: List[tuple]):

@@ -12,7 +12,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from .common import WORKLOADS, emit, geomean, sim
+from .common import WORKLOADS, emit, geomean, sim, sim_many
 
 
 def fig11_runtime(results: Dict) -> List[tuple]:
@@ -21,6 +21,8 @@ def fig11_runtime(results: Dict) -> List[tuple]:
     detail = {}
     speedups = []
     for w in WORKLOADS:
+        sim_many(w, [{"organization": o}
+                     for o in ("inf_hbm", "hbm", "scm", "hms")])
         inf = sim(w, organization="inf_hbm")
         hbm = sim(w, organization="hbm")
         scm = sim(w, organization="scm")
@@ -43,6 +45,8 @@ def fig12_hitrate(results: Dict) -> List[tuple]:
     rows = []
     detail = {}
     for w in WORKLOADS:
+        sim_many(w, [{"policy": pol}
+                     for pol in ("hms", "bear", "redcache", "mccache")])
         d = {}
         for pol in ("hms", "bear", "redcache", "mccache"):
             r = sim(w, policy=pol)
@@ -61,6 +65,9 @@ def fig13_traffic(results: Dict) -> List[tuple]:
     rows = []
     detail = {}
     for w in WORKLOADS:
+        sim_many(w, [{"organization": "inf_hbm"}, {},
+                     {"policy": "no_bypass"},
+                     {"policy": "no_bypass_no_ctc"}])
         base = sim(w, organization="inf_hbm").total_traffic
         t = {
             "hms": sim(w).total_traffic / base,
@@ -102,6 +109,9 @@ def fig14_bypass(results: Dict) -> List[tuple]:
 def fig16_linesize(results: Dict) -> List[tuple]:
     rows = []
     detail = {}
+    for w in WORKLOADS:
+        sim_many(w, [{"line_bytes": line}
+                     for line in (64, 128, 256, 512, 1024)])
     for line in (64, 128, 256, 512, 1024):
         rel = []
         for w in WORKLOADS:
@@ -119,8 +129,12 @@ def fig17_footprint(results: Dict) -> List[tuple]:
     """Fig. 17: HMS/HBM speedup vs relative footprint; SLC for small."""
     rows = []
     detail = {}
-    for r_hbm, mode in ((1.5, "slc"), (1.0, "slc"), (0.75, "mlc"),
-                        (0.5, "mlc"), (0.25, "tlc")):
+    grid = ((1.5, "slc"), (1.0, "slc"), (0.75, "mlc"),
+            (0.5, "mlc"), (0.25, "tlc"))
+    for w in WORKLOADS[:4]:
+        sim_many(w, [{"r_hbm": r, "scm_mode": m} for r, m in grid]
+                 + [{"r_hbm": r, "organization": "hbm"} for r, _ in grid])
+    for r_hbm, mode in grid:
         sp = []
         for w in WORKLOADS[:4]:
             hms = sim(w, r_hbm=r_hbm, scm_mode=mode)
@@ -137,6 +151,10 @@ def fig18_ctc_ways(results: Dict) -> List[tuple]:
     """Fig. 18: CTC capacity sweep, AMIL vs TAD probe traffic + runtime."""
     rows = []
     detail = {}
+    for w in WORKLOADS[:5]:
+        sim_many(w, [{"tag_layout": layout, "ctc_fraction": frac}
+                     for layout in ("amil", "tad")
+                     for frac in (0.25, 0.125, 0.0625)])
     for layout in ("amil", "tad"):
         for frac in (0.25, 0.125, 0.0625):
             rel, probes = [], []
@@ -164,6 +182,8 @@ def fig19_energy(results: Dict) -> List[tuple]:
     detail = {}
     savings = []
     for w in WORKLOADS:
+        sim_many(w, [{"organization": "hbm"}, {},
+                     {"organization": "scm"}])
         hbm = sum(sim(w, organization="hbm").energy_pj.values())
         hms = sum(sim(w).energy_pj.values())
         scm = sum(sim(w, organization="scm").energy_pj.values())
@@ -204,6 +224,9 @@ def prior_traffic(results: Dict) -> List[tuple]:
     BEAR_i / RedCache_i (paper: -91..93% probes, -57..75% SCM writes)."""
     rows = []
     probe_red, w_red = {}, {}
+    for w in WORKLOADS:
+        sim_many(w, [{}, {"policy": "no_bypass_no_ctc"}]
+                 + [{"policy": p} for p in ("bear", "redcache", "mccache")])
     for prior in ("bear", "redcache", "mccache"):
         pr, wr = [], []
         for w in WORKLOADS:
@@ -227,4 +250,35 @@ def prior_traffic(results: Dict) -> List[tuple]:
                      f"probe_reduction={100*probe_red[prior]:.0f}%"
                      f"|scm_write_reduction={100*w_red[prior]:.0f}%"))
     results["prior"] = {"probe": probe_red, "writes": w_red}
+    return rows
+
+
+def sweep_design_space(results: Dict) -> List[tuple]:
+    """Combined design-space sweep (TDRAM-style tag-organization study x
+    SCM-mode sensitivity): tag layout x CTC capacity x SCM mode in ONE
+    batched engine call per workload — the compile-once path that makes
+    Fig. 11/13/15/18-scale exploration cheap."""
+    grid = [{"tag_layout": lay, "ctc_fraction": frac, "scm_mode": mode}
+            for lay in ("amil", "tad")
+            for frac in (0.25, 0.0625)
+            for mode in ("slc", "mlc", "tlc")]
+    rows = []
+    detail = {}
+    for w in WORKLOADS[:3]:
+        rs = sim_many(w, grid)
+        wall = sum(r.wall_s for r in rs)
+        bi = min(range(len(rs)), key=lambda i: rs[i].runtime_cycles)
+        bkw = grid[bi]
+        detail[w] = {
+            "points": len(grid),
+            "wall_s": wall,
+            "us_per_point": wall / len(grid) * 1e6,
+            "best": bkw,
+            "best_runtime": rs[bi].runtime_cycles,
+        }
+        rows.append((f"sweep.{w}", wall / len(grid) * 1e6,
+                     f"points={len(grid)}|best={bkw['tag_layout']}"
+                     f"@{bkw['ctc_fraction']}/{bkw['scm_mode']}"
+                     f"|wall={wall:.1f}s"))
+    results["sweep"] = detail
     return rows

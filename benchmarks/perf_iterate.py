@@ -1,4 +1,5 @@
-"""§Perf hillclimb driver: compare lowering variants of one cell.
+"""§Perf hillclimb driver: compare lowering variants of one cell, or
+execution variants of the HMS sweep engine.
 
 Each named variant re-lowers the cell with different framework options and
 reports the three roofline terms; the hypothesis -> change -> before/after
@@ -7,13 +8,20 @@ log lives in EXPERIMENTS.md §Perf.
     PYTHONPATH=src python -m benchmarks.perf_iterate \
         --arch grok-1-314b --shape train_4k \
         --variants baseline ep_moe no_sp naive_attn
-"""
 
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+``--hms-sweep`` instead hillclimbs the Track-A simulator: it runs the same
+design-space sweep sequentially (per-config ``simulate``; any engine
+compiles the sweep needs happen inside this timed leg, as they would for a
+user iterating configs) and batched (``simulate_many``, one vmapped device
+loop) and reports per-point wall time plus engine retrace counts.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterate \
+        --hms-sweep --workload zipf --n 60000
+"""
 
 import argparse
 import json
+import os
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -56,13 +64,66 @@ def terms(src):
     return t_c, t_m, t_x, dom[0]
 
 
+def hms_sweep(args):
+    """Sequential vs batched execution of one design-space sweep."""
+    import time
+
+    from repro.core import HMSConfig, make_trace, simulate, simulate_many
+    from repro.core.simulator import (engine_cache_size, engine_trace_count,
+                                      group_engine_key)
+
+    t = make_trace(args.workload, n=args.n)
+    grid = [{"tag_layout": lay, "ctc_fraction": frac, "scm_mode": mode}
+            for lay in ("amil", "tad")
+            for frac in (0.25, 0.125, 0.0625)
+            for mode in ("slc", "mlc", "tlc")]
+    cfgs = [HMSConfig(footprint=t.footprint, **kw).validate() for kw in grid]
+
+    out = {"points": len(grid), "workload": args.workload, "n": args.n}
+    t0 = time.time()
+    seq = [simulate(t, c) for c in cfgs]
+    out["sequential_s"] = time.time() - t0
+    t0 = time.time()
+    bat = simulate_many(t, cfgs)
+    out["batched_s"] = time.time() - t0
+    out["speedup"] = out["sequential_s"] / max(out["batched_s"], 1e-9)
+    out["engines_compiled"] = engine_cache_size()
+    out["traces_for_sweep_key"] = engine_trace_count(group_engine_key(t, cfgs))
+    drift = max(abs(a.runtime_cycles - b.runtime_cycles)
+                / max(a.runtime_cycles, 1.0) for a, b in zip(seq, bat))
+    out["max_runtime_drift"] = drift
+    print(f"hms-sweep {args.workload} n={args.n} points={len(grid)}: "
+          f"sequential {out['sequential_s']:.1f}s "
+          f"({out['sequential_s']/len(grid)*1e3:.0f}ms/pt), "
+          f"batched {out['batched_s']:.1f}s "
+          f"({out['batched_s']/len(grid)*1e3:.0f}ms/pt), "
+          f"{out['speedup']:.1f}x, drift={drift:.2e}", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
     ap.add_argument("--variants", nargs="+", default=["baseline"])
+    ap.add_argument("--hms-sweep", action="store_true")
+    ap.add_argument("--workload", default="zipf")
+    ap.add_argument("--n", type=int, default=60_000)
     ap.add_argument("--json")
     args = ap.parse_args()
+
+    if args.hms_sweep:
+        hms_sweep(args)
+        return
+    if not (args.arch and args.shape):
+        ap.error("--arch/--shape are required unless --hms-sweep is given")
+
+    # fake-device mesh only matters for the lowering path; setting it for
+    # --hms-sweep would skew the simulator timings vs benchmarks.run/tests
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
 
     from repro.launch.dryrun import lower_cell
 

@@ -30,6 +30,7 @@ def main() -> None:
         "fig19": figures.fig19_energy,
         "fig20": figures.fig20_throttle,
         "prior": figures.prior_traffic,
+        "sweep": figures.sweep_design_space,
         "kernels": kernel_bench.run,
         "roofline": roofline.run,
     }

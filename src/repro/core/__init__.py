@@ -16,7 +16,7 @@ from .timing import (
     metadata_bits_per_row,
 )
 from .traces import WORKLOADS, Trace, make_trace, preprocess
-from .simulator import SimResult, run_workload, simulate
+from .simulator import SimResult, run_workload, simulate, simulate_many
 
 __all__ = [
     "COLUMN_BYTES", "COLUMNS_PER_ROW", "ROW_BYTES",
@@ -24,5 +24,5 @@ __all__ = [
     "DRAM", "SCM_MLC", "SCM_SLC", "SCM_TLC",
     "amil_fits_in_column", "metadata_bits_per_line", "metadata_bits_per_row",
     "WORKLOADS", "Trace", "make_trace", "preprocess",
-    "SimResult", "run_workload", "simulate",
+    "SimResult", "run_workload", "simulate", "simulate_many",
 ]

@@ -36,10 +36,17 @@ def _way_mask(state, enabled_ways):
     return jnp.arange(ways) < enabled_ways
 
 
-def probe(state, row_group, sector, enabled_ways):
+def _set_index(state, row_group, n_sets):
+    # ``n_sets`` may be a traced scalar smaller than the allocated set count:
+    # the batched engine allocates CTC state at the group's maximum shape and
+    # restricts indexing at runtime, so a capacity sweep shares one compile.
+    sets = state["tags"].shape[0] if n_sets is None else n_sets
+    return row_group % sets
+
+
+def probe(state, row_group, sector, enabled_ways, n_sets=None):
     """Look up one DRAM row's tag sector.  Returns (hit, way)."""
-    sets = state["tags"].shape[0]
-    set_idx = row_group % sets
+    set_idx = _set_index(state, row_group, n_sets)
     line_hit = (state["tags"][set_idx] == row_group) & _way_mask(
         state, enabled_ways
     )
@@ -52,10 +59,9 @@ def probe(state, row_group, sector, enabled_ways):
     return hit, way, line_present, line_way
 
 
-def touch(state, row_group, way):
+def touch(state, row_group, way, n_sets=None):
     """LRU update: the touched way becomes MRU."""
-    sets = state["tags"].shape[0]
-    set_idx = row_group % sets
+    set_idx = _set_index(state, row_group, n_sets)
     ages = state["age"][set_idx]
     my_age = ages[way]
     ages = jnp.where(ages < my_age, ages + 1, ages)
@@ -63,15 +69,14 @@ def touch(state, row_group, way):
     return {**state, "age": state["age"].at[set_idx].set(ages)}
 
 
-def fill(state, row_group, sector, enabled_ways):
+def fill(state, row_group, sector, enabled_ways, n_sets=None):
     """Insert/refresh the sector after a DRAM metadata fetch.
 
     If the row group already has a line, only the sector valid bit is set;
     otherwise the LRU way among the enabled ways is evicted.  Returns the new
     state and the victim way used.
     """
-    sets = state["tags"].shape[0]
-    set_idx = row_group % sets
+    set_idx = _set_index(state, row_group, n_sets)
     mask = _way_mask(state, enabled_ways)
 
     line_hit = (state["tags"][set_idx] == row_group) & mask
@@ -95,14 +100,84 @@ def fill(state, row_group, sector, enabled_ways):
     svalid = state["svalid"].at[set_idx].set(svalid_set)
 
     new = {"tags": tags, "svalid": svalid, "age": state["age"]}
-    return touch(new, row_group, way), way
+    return touch(new, row_group, way, n_sets), way
+
+
+def probe_fill_touch(state, row_group, sector, enabled_ways, n_sets=None):
+    """One CTC access: probe, then LRU-touch on a sector hit or sector fill
+    on a miss — the per-request composition the simulator scan performs.
+
+    Row-level reformulation of ``where(hit, touch(state), fill(state))``:
+    both outcomes leave every set but the indexed one unchanged, so this
+    gathers one set row, computes both candidate rows, and scatters the
+    selected row back — O(ways*sectors) per step instead of the full-state
+    O(sets*ways*sectors) select.  State-identical to the probe/fill/touch
+    composition (the engine-parity golden test pins this).
+
+    Returns ``(new_state, sector_hit)``.
+    """
+    set_idx = _set_index(state, row_group, n_sets)
+    mask = _way_mask(state, enabled_ways)
+    tags_row = state["tags"][set_idx]
+    svalid_row = state["svalid"][set_idx]
+    age_row = state["age"][set_idx]
+
+    line_hit = (tags_row == row_group) & mask
+    sector_hit = line_hit & svalid_row[:, sector]
+    hit = jnp.any(sector_hit)
+    hit_way = jnp.argmax(sector_hit)
+
+    # fill path: reuse a present line's way, else the LRU enabled way
+    line_present = jnp.any(line_hit)
+    line_way = jnp.argmax(line_hit)
+    ages_m = jnp.where(mask, age_row, -1)
+    lru_way = jnp.argmax(ages_m)
+    fway = jnp.where(line_present, line_way, lru_way)
+    fill_tags = tags_row.at[fway].set(row_group)
+    fill_svalid = jnp.where(
+        line_present,
+        svalid_row,
+        svalid_row.at[fway].set(jnp.zeros_like(svalid_row[fway])),
+    )
+    fill_svalid = fill_svalid.at[fway, sector].set(True)
+
+    def touch_row(ages, way):
+        my_age = ages[way]
+        ages = jnp.where(ages < my_age, ages + 1, ages)
+        return ages.at[way].set(0)
+
+    new_tags = jnp.where(hit, tags_row, fill_tags)
+    new_svalid = jnp.where(hit, svalid_row, fill_svalid)
+    new_age = jnp.where(hit, touch_row(age_row, hit_way),
+                        touch_row(age_row, fway))
+    new = {
+        "tags": state["tags"].at[set_idx].set(new_tags),
+        "svalid": state["svalid"].at[set_idx].set(new_svalid),
+        "age": state["age"].at[set_idx].set(new_age),
+    }
+    return new, hit
 
 
 def invalidate_all(state):
     return init_state(*state["svalid"].shape)
 
 
-def storage_overhead_bits(l2_line_bytes: int = 128, sectors: int = 8) -> int:
-    """§III-D overhead estimate: per-line valid/dirty/tag + pLRU per set."""
-    per_line = sectors + sectors + 22          # 8 valid + 8 dirty + 22b tag
-    return per_line
+SECTOR_BYTES = 4       # one AMIL tag bundle (the metadata of one DRAM row)
+
+
+def storage_overhead_bits(l2_line_bytes: int = 32, sectors: int | None = None,
+                          num_row_groups: int = 1 << 22,
+                          ctc_sets: int = 1) -> int:
+    """§III-D overhead estimate: per-line sector valid/dirty bits + tag.
+
+    A CTC line of ``l2_line_bytes`` holds ``l2_line_bytes // 4`` sectors (one
+    4 B AMIL bundle per DRAM row), each needing a valid and a dirty bit.  The
+    row-group tag must distinguish the ``num_row_groups / ctc_sets`` groups
+    that alias onto one set.  The paper's 32 B line over a 4M-row-group space
+    gives 8 + 8 + 22 = 38 bits.
+    """
+    if sectors is None:
+        sectors = max(1, l2_line_bytes // SECTOR_BYTES)
+    groups_per_set = max(2, -(-num_row_groups // max(1, ctc_sets)))
+    tag_bits = (groups_per_set - 1).bit_length()
+    return sectors + sectors + tag_bits

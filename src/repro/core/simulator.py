@@ -19,12 +19,39 @@ occupancy, per-rank bank occupancy (activation/recovery amortized over the
 MSHR run), host-link occupancy, serialized fault handling, and a compute
 floor.  Counters are float64 (x64 is enabled on import: traces are ~10^6
 requests and fp32 accumulators would lose increments).
+
+Engine architecture (compile-once, batched)
+-------------------------------------------
+The paper's headline results are design-space *sweeps*, so the engine is
+split so a sweep costs one compile:
+
+  * **Static structure** — the policy's Python-level branching and every
+    array shape (trace length, DRAM-cache slots, CTC geometry) — forms an
+    ``_EngineKey`` into a module-level jit cache.  Slot/set allocations are
+    bucketed to powers of two so nearby footprints share a compiled engine.
+  * **Runtime scalars** — device timings, ``ema_weight``, ``n_levels``,
+    ``bear_fill_prob``, thresholds, enabled CTC ways/sets, tag-layout costs
+    — are traced arguments; sweeping them never re-traces.
+  * Everything per-request-pure is hoisted out of the sequential scan into
+    vectorized precompute: SCM penalty scores, the penalty EMA / running
+    maxima (tiny scalar scan + ``lax.cummax``), activation-counter values
+    (segmented prefix sums in ``preprocess``), the xorshift dice stream, and
+    per-column activation shares.  The scan carries only genuinely stateful
+    arrays (cache tags/valid/dirty/affinity + CTC state) and emits per-step
+    decision flags from which all counters are reduced vectorially.
+  * ``simulate_many`` vmaps the compiled engine over a batch of runtime
+    parameter sets sharing one static structure, so Fig. 18-style CTC
+    sweeps and policy ablations cost one compile + one device loop.
+
+The seed formulation survives in ``_reference`` and a golden-parity test
+pins this engine to it counter-for-counter.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+import types
+from typing import Dict, List, Sequence
 
 import jax
 
@@ -58,9 +85,7 @@ _COUNTERS = (
     "ctc_hit", "ctc_miss",
 )
 
-
-def _zero_counters():
-    return {k: jnp.zeros((), jnp.float64) for k in _COUNTERS}
+_RNG_SEED = 0x9E3779B9
 
 
 @dataclasses.dataclass
@@ -84,245 +109,425 @@ class SimResult:
 
 
 # ---------------------------------------------------------------------------
-# The HMS scan step.
+# Static structure: the jit-cache key.
 # ---------------------------------------------------------------------------
 
-def _build_step(cfg: HMSConfig, n_pages: int):
-    dram = cfg.dram_timing
-    scm = cfg.scm_timing
-    cpl = cfg.columns_per_line
-    policy = cfg.policy
-    layout = cfg.tag_layout
+def _bucket(n: int) -> int:
+    """Next power of two — state arrays are allocated at bucketed sizes so
+    configs with nearby geometry share one compiled engine (indices never
+    reach the slack, so counters are unaffected)."""
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class _EngineKey:
+    policy: str
+    n: int                  # trace length
+    lines_alloc: int        # DRAM-cache slot allocation (bucketed)
+    ctc_sets_alloc: int
+    ctc_ways_alloc: int
+    ctc_sectors: int
+
+
+def _engine_key(trace: Trace, cfg: HMSConfig) -> _EngineKey:
+    return _EngineKey(
+        policy=cfg.policy,
+        n=trace.n,
+        lines_alloc=_bucket(cfg.num_lines),
+        ctc_sets_alloc=_bucket(cfg.ctc_sets),
+        ctc_ways_alloc=_bucket(cfg.ctc_ways),
+        ctc_sectors=cfg.ctc_sectors_per_line,
+    )
+
+
+def _runtime_params(cfg: HMSConfig) -> Dict[str, np.ndarray]:
+    """Everything the engine treats as data: sweeping these re-uses the
+    compiled scan.  Timing values are exact small integers, so f32 carries
+    them losslessly (matching the seed engine's weak-typed arithmetic)."""
+    dram, scm = cfg.dram_timing, cfg.scm_timing
+    amil = cfg.tag_layout == "amil"
+    return {
+        "dram_rcd": np.float32(dram.rcd), "dram_wr": np.float32(dram.wr),
+        "dram_rp": np.float32(dram.rp),
+        "scm_rcd": np.float32(scm.rcd), "scm_wr": np.float32(scm.wr),
+        "scm_rp": np.float32(scm.rp),
+        "ema_weight": np.float64(cfg.ema_weight),
+        "n_levels": np.int32(cfg.n_levels),
+        "use_act_counter": np.bool_(cfg.use_activation_counter),
+        "bear_fill_prob": np.float32(cfg.bear_fill_prob),
+        "redcache_threshold": np.int32(cfg.redcache_threshold),
+        "ctc_ways": np.int32(cfg.ctc_ways),
+        "ctc_sets": np.int32(cfg.ctc_sets),
+        "probe_cost": np.float32(1.0 if amil else float(cfg.lines_per_row)),
+        "meta_wr_cost": np.float32(1.0 if amil else 0.0),
+        "cpl": np.float32(cfg.columns_per_line),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Dice stream: the seed engine steps one xorshift32 per request from a fixed
+# seed, so the whole stream is trace-position-only.  Grown lazily and shared
+# across every simulation.
+# ---------------------------------------------------------------------------
+
+_DICE_CHAIN = np.zeros(0, dtype=np.uint32)
+_DICE_F32: Dict[int, np.ndarray] = {}
+
+
+def _dice(n: int) -> np.ndarray:
+    global _DICE_CHAIN
+    if n not in _DICE_F32:
+        if _DICE_CHAIN.size < n:
+            s = int(_DICE_CHAIN[-1]) if _DICE_CHAIN.size else _RNG_SEED
+            ext = np.empty(n - _DICE_CHAIN.size, dtype=np.uint32)
+            for i in range(ext.size):
+                s = (s ^ (s << 13)) & 0xFFFFFFFF
+                s = s ^ (s >> 17)
+                s = (s ^ (s << 5)) & 0xFFFFFFFF
+                ext[i] = s
+            _DICE_CHAIN = np.concatenate([_DICE_CHAIN, ext])
+        # cached per length so repeated calls skip regenerating/converting
+        # the chain (the batched path still stacks per-config copies)
+        _DICE_F32[n] = (_DICE_CHAIN[:n].astype(np.float32)
+                        * np.float32(1.0 / 4294967296.0))
+    return _DICE_F32[n]
+
+
+def _engine_inputs(trace: Trace, cfg: HMSConfig, pre) -> Dict[str, np.ndarray]:
+    # packed-word layout limits (tag<<10 must stay inside int32; affinity
+    # levels live in an 8-bit field)
+    assert int(pre["tag"].max(initial=0)) < (1 << 21), "tag overflows packing"
+    assert cfg.n_levels <= 256, "affinity level overflows 8-bit packing"
+    return {
+        "slot": pre["slot"],
+        "tag": pre["tag"],
+        "is_write": pre["is_write"],
+        "row_group": pre["row_group"],
+        "sector": pre["sector"],
+        "run_ncols": pre["run_ncols"],
+        "run_haswrite": pre["run_haswrite"],
+        "page_act": pre["page_act"],
+        "max_act": pre["max_act"],
+        # tag layout folds into per-request data + cost scalars, so AMIL vs
+        # TAD sweeps share one compile
+        "excluded": pre["amil_excluded"] & (cfg.tag_layout == "amil"),
+        "dice": _dice(trace.n),
+    }
+
+
+# ---------------------------------------------------------------------------
+# The compiled engine: vectorized precompute + lean scan + counter reduce.
+# ---------------------------------------------------------------------------
+
+def _make_engine(key: _EngineKey):
+    policy = key.policy
     use_ctc = policy in ("hms", "no_bypass", "no_second_level")
     ideal_probe = policy in ("bear", "redcache", "mccache")
-    probe_cost = 1.0 if layout == "amil" else float(cfg.lines_per_row)
-    meta_wr_cost = 1.0 if layout == "amil" else 0.0
+    two_level = policy in ("hms", "no_second_level")
+    mc_wt = policy == "mccache"
+    dirty_ok = not mc_wt
 
-    def step(carry, x):
-        cache, ctcst, act, scal, C = carry
-        (max_act, pen_ema, pen_max, aff_max, rng) = scal
+    def engine(xs, p):
+        ncols = jnp.asarray(xs["run_ncols"])
+        haswrite = jnp.asarray(xs["run_haswrite"])
+        is_write = jnp.asarray(xs["is_write"])
+        page_act = jnp.asarray(xs["page_act"])
+        max_act = jnp.asarray(xs["max_act"])
+        dice = jnp.asarray(xs["dice"])
+        excluded = jnp.asarray(xs["excluded"])
 
-        slot = x["slot"]
-        tag = x["tag"]
-        is_write = x["is_write"]
-        page = x["page"]
-        run_start = x["run_start"]
-        ncols = x["run_ncols"]
-        haswrite = x["run_haswrite"]
-        excluded = x["amil_excluded"] & (layout == "amil")
+        dram = types.SimpleNamespace(
+            rcd=p["dram_rcd"], wr=p["dram_wr"], rp=p["dram_rp"])
+        scm = types.SimpleNamespace(
+            rcd=p["scm_rcd"], wr=p["scm_wr"], rp=p["scm_rp"])
+
+        # ---- per-request-pure precompute (was scan-carried in the seed) ---
+        pen = bp.scm_penalty_score(ncols, haswrite, dram, scm)
+        pen64 = pen.astype(jnp.float64)
+        pen_max = jax.lax.cummax(pen64, axis=0)
+
+        def ema_step(avg, v):
+            nxt = bp.ema_update(avg, v, p["ema_weight"])
+            return nxt, nxt
+
+        # unroll: same sequential recurrence (bitwise-identical to the seed's
+        # in-scan EMA), just with 32x less while-loop overhead
+        _, pen_ema = jax.lax.scan(
+            ema_step, jnp.zeros((), jnp.float64), pen64, unroll=32)
+
+        req_lvl = bp.discretize(pen, pen_max, p["n_levels"])
+        avg_lvl = bp.discretize(pen_ema, pen_max, p["n_levels"])
+        aff = bp.affinity_score(pen, page_act, p["use_act_counter"])
+        aff_max = jax.lax.cummax(aff.astype(jnp.float64), axis=0)
+        req_aff_lvl = bp.discretize(aff, aff_max, p["n_levels"])
+        pass1 = req_lvl > avg_lvl
+        dec_ok = dice < bp.p_dec(page_act, max_act)
+
+        # fill candidacy before the (stateful) accept decision
+        if two_level:
+            cand = ~excluded & pass1
+        elif policy in ("no_bypass", "no_bypass_no_ctc", "always_cache"):
+            cand = ~excluded
+        elif policy == "bear":
+            cand = dice < p["bear_fill_prob"]
+        elif policy == "redcache":
+            cand = page_act >= p["redcache_threshold"]
+        elif policy == "mccache":
+            cand = ~is_write
+        else:
+            raise ValueError(policy)
+
+        # ---- the sequential core: only genuinely stateful arrays ----------
+        # The DRAM-cache metadata (tag, affinity level, dirty, valid) packs
+        # into one int32 word per slot: one gather + one scatter per step
+        # instead of four of each, and a single carry buffer XLA keeps
+        # in-place.  Layout: tag<<10 | aff<<2 | dirty<<1 | valid; an all-zero
+        # word is an invalid slot, so no -1 sentinel is needed (the valid bit
+        # gates tag comparison).  Unpacked values are exactly the seed
+        # engine's int32/bool state, so counters are unchanged.
+        cache = jnp.zeros((key.lines_alloc,), jnp.int32)
+        ctcst = ctc_mod.init_state(
+            key.ctc_sets_alloc, key.ctc_ways_alloc, key.ctc_sectors)
+        n_sets = p["ctc_sets"]
+        e_ways = p["ctc_ways"]
+
+        scan_xs = {
+            "slot": jnp.asarray(xs["slot"]),
+            "tag": jnp.asarray(xs["tag"]),
+            "is_write": is_write,
+            "cand": cand,
+            "req_aff_lvl": req_aff_lvl,
+            "dec_ok": dec_ok,
+            "row_group": jnp.asarray(xs["row_group"]),
+            "sector": jnp.asarray(xs["sector"]),
+        }
+
+        def step(carry, x):
+            cache, ctcst = carry
+            slot = x["slot"]
+            tag = x["tag"]
+
+            word = cache[slot]
+            victim_valid = (word & 1) == 1
+            victim_dirty = ((word & 2) == 2) & victim_valid
+            victim_aff = (word >> 2) & 0xFF
+            stored_tag = word >> 10
+            hit = victim_valid & (stored_tag == tag)
+
+            if use_ctc:
+                ctcst, c_hit = ctc_mod.probe_fill_touch(
+                    ctcst, x["row_group"], x["sector"], e_ways, n_sets)
+            elif ideal_probe:
+                c_hit = jnp.asarray(True)
+            else:
+                c_hit = jnp.asarray(False)
+
+            miss = ~hit
+            if policy == "hms":
+                accept = (~victim_valid) | (x["req_aff_lvl"] > victim_aff)
+                need_aff_read = miss & x["cand"] & c_hit & victim_valid
+            else:
+                accept = jnp.asarray(True)
+                need_aff_read = jnp.asarray(False)
+            do_fill = miss & x["cand"] & accept
+            rejected = miss & x["cand"] & ~accept
+            dec = rejected & victim_valid & x["dec_ok"]
+
+            set_dirty = (hit | do_fill) & x["is_write"] & dirty_ok
+            new_tag = jnp.where(do_fill, tag, stored_tag)
+            new_valid = victim_valid | do_fill
+            new_dirty = jnp.where(
+                do_fill, set_dirty,
+                ((word & 2) == 2) | (hit & x["is_write"] & dirty_ok))
+            new_aff = jnp.where(
+                do_fill,
+                x["req_aff_lvl"],
+                jnp.maximum(victim_aff - dec.astype(jnp.int32), 0),
+            )
+            new_word = ((new_tag << 10) | (new_aff << 2)
+                        | (new_dirty.astype(jnp.int32) << 1)
+                        | new_valid.astype(jnp.int32))
+            cache = cache.at[slot].set(new_word)
+
+            ys = {"hit": hit, "c_hit": c_hit, "do_fill": do_fill,
+                  "rejected": rejected, "dec": dec,
+                  "wb": do_fill & victim_dirty,
+                  "need_aff_read": need_aff_read}
+            return (cache, ctcst), ys
+
+        _, ys = jax.lax.scan(step, (cache, ctcst), scan_xs)
+
+        # ---- vectorized counter reduction ---------------------------------
+        hit = ys["hit"]
+        miss = ~hit
+        c_hit = ys["c_hit"]
+        do_fill = ys["do_fill"]
+        wb = ys["wb"]
+        nar = ys["need_aff_read"]
+
+        C = {k: jnp.zeros((), jnp.float64) for k in _COUNTERS}
 
         def add(name, v):
-            C[name] = C[name] + jnp.asarray(v, jnp.float64)
+            C[name] = C[name] + jnp.sum(jnp.asarray(v, jnp.float64))
 
-        # -- activation counter (2 MiB-grain analogue) ---------------------
-        act = act.at[page].add(run_start.astype(jnp.int32))
-        page_act = act[page]
-        max_act = jnp.maximum(max_act, page_act.astype(jnp.float64))
-
-        # -- DRAM cache lookup ---------------------------------------------
-        hit = cache["valid"][slot] & (cache["tags"][slot] == tag)
-
-        # -- CTC -------------------------------------------------------------
+        probe_cost = p["probe_cost"]
         if use_ctc:
-            c_hit, way, line_present, line_way = ctc_mod.probe(
-                ctcst, x["row_group"], x["sector"], cfg.ctc_ways
-            )
             add("ctc_hit", c_hit)
             add("ctc_miss", ~c_hit)
-            # CTC miss -> DRAM metadata fetch (1 col AMIL, 8 cols TAD) and
-            # sector fill.  The activation is charged standalone.
             add("probe_cols", jnp.where(c_hit, 0.0, probe_cost))
             add("dram_busy",
                 jnp.where(c_hit, 0.0, dram.rcd + probe_cost + dram.rp))
             add("dram_acts", jnp.where(c_hit, 0.0, 1.0))
-            new_ctc, _ = ctc_mod.fill(
-                ctcst, x["row_group"], x["sector"], cfg.ctc_ways
-            )
-            touched = ctc_mod.touch(ctcst, x["row_group"], way)
-            ctcst = jax.tree.map(
-                lambda a, b: jnp.where(c_hit, a, b), touched, new_ctc
-            )
-        elif ideal_probe:
-            c_hit = jnp.asarray(True)
-        else:
-            # No CTC: every L2 miss probes DRAM for the tag.
-            c_hit = jnp.asarray(False)
-            add("ctc_miss", 1.0)
-            add("probe_cols", probe_cost)
-            add("dram_busy", dram.rcd + probe_cost + dram.rp)
-            add("dram_acts", 1.0)
+        elif not ideal_probe:
+            add("ctc_miss", jnp.ones_like(hit))
+            add("probe_cols", jnp.full(hit.shape, probe_cost))
+            add("dram_busy",
+                jnp.full(hit.shape, dram.rcd + probe_cost + dram.rp))
+            add("dram_acts", jnp.ones_like(hit))
 
-        # -- SCM penalty / affinity scores ----------------------------------
-        pen = bp.scm_penalty_score(ncols, haswrite, dram, scm)
-        pen_max = jnp.maximum(pen_max, pen.astype(jnp.float64))
-        pen_ema = bp.ema_update(pen_ema, pen.astype(jnp.float64),
-                                cfg.ema_weight)
-        req_lvl = bp.discretize(pen, pen_max, cfg.n_levels)
-        avg_lvl = bp.discretize(pen_ema, pen_max, cfg.n_levels)
-
-        aff = bp.affinity_score(pen, page_act, cfg.use_activation_counter)
-        aff_max = jnp.maximum(aff_max, aff.astype(jnp.float64))
-        req_aff_lvl = bp.discretize(aff, aff_max, cfg.n_levels)
-
-        victim_valid = cache["valid"][slot]
-        victim_dirty = cache["dirty"][slot] & victim_valid
-        victim_aff = cache["aff"][slot]
-
-        rng = bp.xorshift32(rng)
-        dice = bp.uniform01(rng)
-
-        # -- fill / bypass decision -----------------------------------------
-        miss = ~hit
-        if policy in ("hms", "no_second_level"):
-            pass1 = req_lvl > avg_lvl          # level-1 survivor
+        if two_level:
             add("bypass_l1", miss & ~excluded & ~pass1)
+            add("bypass_l2", ys["rejected"])
+            add("aff_decs", ys["dec"])
             if policy == "hms":
-                accept = (~victim_valid) | (req_aff_lvl > victim_aff)
-                # Reading the victim's affinity is free when the metadata
-                # word was just fetched on a CTC miss; otherwise it costs
-                # one extra DRAM metadata column.
-                need_aff_read = miss & pass1 & ~excluded & c_hit & victim_valid
-                add("probe_cols", need_aff_read)
+                add("probe_cols", nar)
                 add("dram_busy",
-                    jnp.where(need_aff_read, dram.rcd + 1.0 + dram.rp, 0.0))
-                add("dram_acts", need_aff_read)
-            else:
-                accept = jnp.asarray(True)
-            do_fill = miss & ~excluded & pass1 & accept
-            rejected = miss & ~excluded & pass1 & ~accept
-            add("bypass_l2", rejected)
-            # probabilistic decay of the victim's affinity level
-            dec = rejected & victim_valid & (dice < bp.p_dec(page_act, max_act))
-            add("aff_decs", dec)
-        elif policy in ("no_bypass", "no_bypass_no_ctc", "always_cache"):
-            do_fill = miss & ~excluded
-            dec = jnp.asarray(False)
-        elif policy == "bear":
-            do_fill = miss & (dice < cfg.bear_fill_prob)
-            dec = jnp.asarray(False)
-        elif policy == "redcache":
-            do_fill = miss & (page_act >= cfg.redcache_threshold)
-            dec = jnp.asarray(False)
-        elif policy == "mccache":
-            do_fill = miss & ~is_write
-            dec = jnp.asarray(False)
-        else:
-            raise ValueError(policy)
+                    jnp.where(nar, dram.rcd + 1.0 + dram.rp, 0.0))
+                add("dram_acts", nar)
 
-        # -- demand service ---------------------------------------------------
-        mc_wt = policy == "mccache"   # write-through writes (static)
-        dirty_ok = jnp.asarray(not mc_wt)
         rd = ~is_write
-        # hits
         add("hit_r", hit & rd)
         add("hit_w", hit & is_write)
         add("miss_r", miss & rd)
         add("miss_w", miss & is_write)
         add("demand_dram_rd", hit & rd)
         add("demand_dram_wr", hit & is_write)
-        # per-column amortized activation + recovery shares
         dram_share = (dram.rcd + dram.rp) / ncols + jnp.where(
-            is_write, dram.wr / ncols, 0.0
-        )
+            is_write, dram.wr / ncols, 0.0)
         scm_share = (scm.rcd + scm.rp) / ncols + jnp.where(
-            is_write, scm.wr / ncols, 0.0
-        )
+            is_write, scm.wr / ncols, 0.0)
         add("dram_busy", jnp.where(hit, 1.0 + dram_share, 0.0))
         add("dram_acts", jnp.where(hit, 1.0 / ncols, 0.0))
         if mc_wt:
-            # write-through: the write also goes to SCM
             wt = hit & is_write
             add("demand_scm_wr", wt)
             add("scm_busy", jnp.where(wt, 1.0 + scm_share, 0.0))
             add("scm_acts", jnp.where(wt, 1.0 / ncols, 0.0))
             add("scm_wr_acts", jnp.where(wt, 1.0 / ncols, 0.0))
 
-        # misses: demand from SCM unless the fill itself delivers the line
         dem_scm_rd = miss & rd & ~do_fill
         dem_scm_wr = miss & is_write & ~do_fill
         add("demand_scm_rd", dem_scm_rd)
         add("demand_scm_wr", dem_scm_wr)
         add("scm_busy",
             jnp.where(dem_scm_rd | dem_scm_wr, 1.0 + scm_share, 0.0))
-        add("scm_acts", jnp.where(dem_scm_rd | dem_scm_wr, 1.0 / ncols, 0.0))
+        add("scm_acts",
+            jnp.where(dem_scm_rd | dem_scm_wr, 1.0 / ncols, 0.0))
         add("scm_wr_acts", jnp.where(dem_scm_wr, 1.0 / ncols, 0.0))
 
-        # fills: read full line from SCM, write it to DRAM (+ metadata col)
+        cpl = p["cpl"]
         add("fills", do_fill)
-        add("fill_scm_rd", jnp.where(do_fill, float(cpl), 0.0))
-        add("fill_dram_wr", jnp.where(do_fill, float(cpl), 0.0))
-        add("meta_wr_cols", jnp.where(do_fill, meta_wr_cost, 0.0))
-        add("scm_busy",
-            jnp.where(do_fill, scm.rcd + cpl + scm.rp, 0.0))
+        add("fill_scm_rd", jnp.where(do_fill, cpl, 0.0))
+        add("fill_dram_wr", jnp.where(do_fill, cpl, 0.0))
+        add("meta_wr_cols", jnp.where(do_fill, p["meta_wr_cost"], 0.0))
+        add("scm_busy", jnp.where(do_fill, scm.rcd + cpl + scm.rp, 0.0))
         add("dram_busy",
             jnp.where(do_fill, dram.rcd + cpl + dram.wr + dram.rp
-                      + meta_wr_cost, 0.0))
+                      + p["meta_wr_cost"], 0.0))
         add("scm_acts", do_fill)
         add("dram_acts", do_fill)
 
-        # dirty-victim writeback: DRAM line read + SCM line write
-        wb = do_fill & victim_dirty
         add("dirty_evicts", wb)
-        add("wb_dram_rd", jnp.where(wb, float(cpl), 0.0))
-        add("wb_scm_wr", jnp.where(wb, float(cpl), 0.0))
+        add("wb_dram_rd", jnp.where(wb, cpl, 0.0))
+        add("wb_scm_wr", jnp.where(wb, cpl, 0.0))
         add("dram_busy", jnp.where(wb, dram.rcd + cpl + dram.rp, 0.0))
         add("scm_busy", jnp.where(wb, scm.rcd + cpl + scm.wr + scm.rp, 0.0))
         add("dram_acts", wb)
         add("scm_acts", wb)
         add("scm_wr_acts", wb)
 
-        # -- cache state update ----------------------------------------------
-        set_dirty = (hit | do_fill) & is_write & dirty_ok
-        tags = cache["tags"].at[slot].set(
-            jnp.where(do_fill, tag, cache["tags"][slot]))
-        valid = cache["valid"].at[slot].set(cache["valid"][slot] | do_fill)
-        dirty = cache["dirty"].at[slot].set(
-            jnp.where(do_fill, set_dirty,
-                      cache["dirty"][slot] | (hit & is_write & dirty_ok)))
-        affn = cache["aff"].at[slot].set(
-            jnp.where(
-                do_fill,
-                req_aff_lvl,
-                jnp.maximum(cache["aff"][slot] - dec.astype(jnp.int32), 0),
-            )
-        )
-        cache = {"tags": tags, "valid": valid, "dirty": dirty, "aff": affn}
+        return C
 
-        scal = (max_act, pen_ema, pen_max, aff_max, rng)
-        return (cache, ctcst, act, scal, C), None
-
-    return step
+    return engine
 
 
-def _run_hms_scan(trace: Trace, cfg: HMSConfig, pre) -> Dict[str, float]:
-    n_pages = int(pre["n_pages"])
-    cache = {
-        "tags": jnp.full((cfg.num_lines,), -1, jnp.int32),
-        "valid": jnp.zeros((cfg.num_lines,), jnp.bool_),
-        "dirty": jnp.zeros((cfg.num_lines,), jnp.bool_),
-        "aff": jnp.zeros((cfg.num_lines,), jnp.int32),
-    }
-    ctcst = ctc_mod.init_state(
-        cfg.ctc_sets, cfg.ctc_ways, cfg.ctc_sectors_per_line
+# Module-level jit caches: one compiled engine per static structure, plus a
+# per-batch-width vmapped variant.  ``_TRACE_COUNTS`` counts Python traces of
+# each engine (a retrace executes the Python body), which the no-retrace test
+# asserts on.
+_ENGINE_CACHE: Dict[_EngineKey, object] = {}
+_BATCHED_CACHE: Dict[_EngineKey, object] = {}
+_TRACE_COUNTS: Dict[_EngineKey, int] = {}
+
+
+def engine_trace_count(key: _EngineKey) -> int:
+    """How many times the engine for ``key`` has been traced (compiled)."""
+    return _TRACE_COUNTS.get(key, 0)
+
+
+def group_engine_key(trace: Trace, configs: Sequence[HMSConfig]) -> _EngineKey:
+    """The engine key ``simulate_many`` uses for a batch of scan configs
+    (allocations are the bucketed group maxima, so this can differ from any
+    single config's ``_engine_key``)."""
+    cfgs = [c.validate() for c in configs]
+    policies = {c.policy for c in cfgs}
+    sectors = {c.ctc_sectors_per_line for c in cfgs}
+    assert len(policies) == 1 and len(sectors) == 1, (
+        "group_engine_key wants configs from one static-structure group")
+    return _EngineKey(
+        policy=policies.pop(),
+        n=trace.n,
+        lines_alloc=_bucket(max(c.num_lines for c in cfgs)),
+        ctc_sets_alloc=_bucket(max(c.ctc_sets for c in cfgs)),
+        ctc_ways_alloc=_bucket(max(c.ctc_ways for c in cfgs)),
+        ctc_sectors=sectors.pop(),
     )
-    act = jnp.zeros((n_pages,), jnp.int32)
-    scal = (
-        jnp.zeros((), jnp.float64),    # max_act
-        jnp.zeros((), jnp.float64),    # pen_ema
-        jnp.zeros((), jnp.float64),    # pen_max
-        jnp.zeros((), jnp.float64),    # aff_max
-        jnp.asarray(0x9E3779B9, jnp.uint32),
-    )
-    xs = {
-        k: jnp.asarray(pre[k])
-        for k in (
-            "slot", "tag", "is_write", "page", "run_start", "run_ncols",
-            "run_haswrite", "amil_excluded", "row_group", "sector",
-        )
-    }
-    step = _build_step(cfg, n_pages)
-    init = (cache, ctcst, act, scal, _zero_counters())
-    (cache, ctcst, act, scal, C), _ = jax.lax.scan(step, init, xs)
+
+
+def engine_cache_size() -> int:
+    return len(_ENGINE_CACHE)
+
+
+def clear_engine_cache() -> None:
+    _ENGINE_CACHE.clear()
+    _BATCHED_CACHE.clear()
+    _TRACE_COUNTS.clear()
+
+
+def _counting(key: _EngineKey):
+    base = _make_engine(key)
+
+    def fn(xs, p):
+        _TRACE_COUNTS[key] = _TRACE_COUNTS.get(key, 0) + 1
+        return base(xs, p)
+
+    return fn
+
+
+def _engine_for(key: _EngineKey):
+    if key not in _ENGINE_CACHE:
+        _ENGINE_CACHE[key] = jax.jit(_counting(key))
+    return _ENGINE_CACHE[key]
+
+
+def _batched_engine_for(key: _EngineKey):
+    # Stacked xs (in_axes=0 everywhere) costs batch-width host copies of the
+    # trace arrays but runs ~3x faster than broadcasting shared arrays with
+    # in_axes=None: the vmapped scan slices uniform batched xs contiguously
+    # per step, while broadcast operands re-materialize inside the loop.
+    # jit re-specializes per batch shape on its own, so the key needs no
+    # width component.
+    if key not in _BATCHED_CACHE:
+        _BATCHED_CACHE[key] = jax.jit(jax.vmap(_counting(key)))
+    return _BATCHED_CACHE[key]
+
+
+def _run_hms_scan(trace: Trace, cfg: HMSConfig, pre,
+                  key: _EngineKey | None = None) -> Dict[str, float]:
+    if key is None:
+        key = _engine_key(trace, cfg)
+    fn = _engine_for(key)
+    C = fn(_engine_inputs(trace, cfg, pre), _runtime_params(cfg))
     return {k: float(v) for k, v in C.items()}
 
 
@@ -340,11 +545,12 @@ def _single_tier_counters(trace: Trace, cfg: HMSConfig, device) -> Dict[str, flo
     busy = float(np.sum(1.0 + share))
     acts = float(np.sum(1.0 / ncols))
     C = {k: 0.0 for k in _COUNTERS}
-    C["demand_dram_rd" if device.rcd <= 20 else "demand_scm_rd"] = float(
+    is_dram = device.kind == "dram"
+    C["demand_dram_rd" if is_dram else "demand_scm_rd"] = float(
         np.sum(~is_write))
-    C["demand_dram_wr" if device.rcd <= 20 else "demand_scm_wr"] = float(
+    C["demand_dram_wr" if is_dram else "demand_scm_wr"] = float(
         np.sum(is_write))
-    if device.rcd <= 20:
+    if is_dram:
         C["dram_busy"] = busy
         C["dram_acts"] = acts
     else:
@@ -546,8 +752,27 @@ def _finish(name, cfg, C, link_bytes=0.0, fault_cycles=0.0,
     )
 
 
+def _finish_hms(trace: Trace, cfg: HMSConfig, C: Dict[str, float],
+                nvlink: bool) -> SimResult:
+    """Shared tail of the hms/separate path: optional UM overflow + finish."""
+    fault_cycles = 0.0
+    link_bytes = 0.0
+    if trace.footprint > cfg.scm_capacity + cfg.dram_cache_capacity:
+        # HMS itself oversubscribed (Fig. 17's rel-footprint 4.0 case):
+        # UM faults against the *SCM* capacity on top of the cache model.
+        big = dataclasses.replace(
+            cfg, r_hbm=(cfg.scm_capacity + cfg.dram_cache_capacity)
+            / trace.footprint)
+        faults, mig, wb, remote = _run_um(trace, big, nvlink=nvlink)
+        link_bytes = (mig + wb) * UM_PAGE_BYTES + remote * COLUMN_BYTES
+        fault_cycles = (0.0 if nvlink
+                        else faults * cfg.fault_latency_ns / cfg.fault_overlap)
+    return _finish(trace.name, cfg, C, link_bytes=link_bytes,
+                   fault_cycles=fault_cycles, n_requests=trace.n)
+
+
 # ---------------------------------------------------------------------------
-# Public entry point.
+# Public entry points.
 # ---------------------------------------------------------------------------
 
 def simulate(trace: Trace, cfg: HMSConfig, nvlink: bool = False) -> SimResult:
@@ -576,20 +801,65 @@ def simulate(trace: Trace, cfg: HMSConfig, nvlink: bool = False) -> SimResult:
     # hms / separate
     pre = preprocess(trace, cfg)
     C = _run_hms_scan(trace, cfg, pre)
-    fault_cycles = 0.0
-    link_bytes = 0.0
-    if trace.footprint > cfg.scm_capacity + cfg.dram_cache_capacity:
-        # HMS itself oversubscribed (Fig. 17's rel-footprint 4.0 case):
-        # UM faults against the *SCM* capacity on top of the cache model.
-        big = dataclasses.replace(
-            cfg, r_hbm=(cfg.scm_capacity + cfg.dram_cache_capacity)
-            / trace.footprint)
-        faults, mig, wb, remote = _run_um(trace, big, nvlink=nvlink)
-        link_bytes = (mig + wb) * UM_PAGE_BYTES + remote * COLUMN_BYTES
-        fault_cycles = (0.0 if nvlink
-                        else faults * cfg.fault_latency_ns / cfg.fault_overlap)
-    return _finish(trace.name, cfg, C, link_bytes=link_bytes,
-                   fault_cycles=fault_cycles, n_requests=trace.n)
+    return _finish_hms(trace, cfg, C, nvlink)
+
+
+def _pre_geometry_key(cfg: HMSConfig) -> tuple:
+    """Everything ``preprocess`` depends on besides the trace."""
+    return (cfg.line_bytes, cfg.dram_cache_capacity,
+            cfg.ctc_sectors_per_line, cfg.act_page_bytes)
+
+
+def simulate_many(trace: Trace, configs: Sequence[HMSConfig],
+                  nvlink: bool = False) -> List[SimResult]:
+    """Simulate one trace under many configs, batching compatible configs.
+
+    Configs whose static structure matches (same policy and compatible
+    bucketed geometry) are vmapped over their runtime parameters and run as
+    one compiled, batched scan — a CTC-way sweep or tag-layout ablation
+    costs one compile + one device loop.  Non-scan organizations (inf_hbm /
+    scm / hbm) fall back to the sequential path.  Results come back in input
+    order and match sequential ``simulate`` counter-for-counter.
+    """
+    configs = [c.validate() for c in configs]
+    results: List[SimResult | None] = [None] * len(configs)
+
+    pres: Dict[tuple, dict] = {}
+
+    def pre_for(cfg):
+        gk = _pre_geometry_key(cfg)
+        if gk not in pres:
+            pres[gk] = preprocess(trace, cfg)
+        return pres[gk]
+
+    groups: Dict[tuple, List[int]] = {}
+    for i, cfg in enumerate(configs):
+        if cfg.organization in ("hms", "separate"):
+            groups.setdefault(
+                (cfg.policy, cfg.ctc_sectors_per_line), []).append(i)
+        else:
+            results[i] = simulate(trace, cfg, nvlink=nvlink)
+
+    for (policy, sectors), idxs in groups.items():
+        key = group_engine_key(trace, [configs[i] for i in idxs])
+        if len(idxs) == 1:
+            i = idxs[0]
+            C = _run_hms_scan(trace, configs[i], pre_for(configs[i]), key)
+            results[i] = _finish_hms(trace, configs[i], C, nvlink)
+            continue
+        xs_list = [_engine_inputs(trace, configs[i], pre_for(configs[i]))
+                   for i in idxs]
+        xs = {k: np.stack([x[k] for x in xs_list]) for k in xs_list[0]}
+        params_list = [_runtime_params(configs[i]) for i in idxs]
+        params = {k: np.stack([p[k] for p in params_list])
+                  for k in params_list[0]}
+        fn = _batched_engine_for(key)
+        Cs = fn(xs, params)
+        for j, i in enumerate(idxs):
+            C = {k: float(v[j]) for k, v in Cs.items()}
+            results[i] = _finish_hms(trace, configs[i], C, nvlink)
+
+    return results
 
 
 def run_workload(name: str, cfg: HMSConfig, n: int | None = None,

@@ -38,13 +38,19 @@ PCIE_ENERGY_PJ_PER_BIT = 8.0
 
 @dataclasses.dataclass(frozen=True)
 class DeviceTiming:
-    """Timing parameters of one memory device (DRAM or SCM), in bus cycles."""
+    """Timing parameters of one memory device (DRAM or SCM), in bus cycles.
+
+    ``kind`` names the device role ("dram" or "scm") so counter attribution
+    never has to guess from timing magnitudes (a fast SLC-mode SCM is still
+    SCM for traffic/energy accounting).
+    """
 
     cl: int = 14
     rcd: int = 14
     ras: int = 33
     wr: int = 16
     rp: int = 14
+    kind: str = "dram"
 
     def row_miss_read_cycles(self, ncols: int) -> float:
         """Closed-page activation + ncols column reads + precharge."""
@@ -54,10 +60,10 @@ class DeviceTiming:
         return self.rcd + self.cl + ncols + self.wr + self.rp
 
 
-DRAM = DeviceTiming(cl=14, rcd=14, ras=33, wr=16, rp=14)
-SCM_MLC = DeviceTiming(cl=14, rcd=120, ras=120, wr=1000, rp=14)
-SCM_SLC = DeviceTiming(cl=14, rcd=60, ras=60, wr=150, rp=14)
-SCM_TLC = DeviceTiming(cl=14, rcd=250, ras=250, wr=2350, rp=14)
+DRAM = DeviceTiming(cl=14, rcd=14, ras=33, wr=16, rp=14, kind="dram")
+SCM_MLC = DeviceTiming(cl=14, rcd=120, ras=120, wr=1000, rp=14, kind="scm")
+SCM_SLC = DeviceTiming(cl=14, rcd=60, ras=60, wr=150, rp=14, kind="scm")
+SCM_TLC = DeviceTiming(cl=14, rcd=250, ras=250, wr=2350, rp=14, kind="scm")
 
 SCM_MODES = {"slc": SCM_SLC, "mlc": SCM_MLC, "tlc": SCM_TLC}
 

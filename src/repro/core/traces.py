@@ -339,6 +339,28 @@ def preprocess(trace: Trace, cfg: HMSConfig) -> Dict[str, np.ndarray]:
 
     n_pages = int(page.max(initial=0)) + 1 if trace.n else 1
 
+    # Per-request activation-counter values, hoisted out of the simulator's
+    # sequential scan: page_act[i] is the count of run starts for request i's
+    # page among requests 0..i (what the scan-carried counter array would
+    # read after its own increment), max_act its running maximum.  Computed
+    # as a segmented inclusive prefix sum over a stable page-sort.
+    if trace.n:
+        order = np.argsort(page, kind="stable")
+        rs_sorted = new_run[order].astype(np.int64)
+        cs = np.cumsum(rs_sorted)
+        p_sorted = page[order]
+        grp_first = np.ones(trace.n, dtype=bool)
+        grp_first[1:] = p_sorted[1:] != p_sorted[:-1]
+        first_idx = np.maximum.accumulate(
+            np.where(grp_first, np.arange(trace.n), 0))
+        grp_base = (cs - rs_sorted)[first_idx]
+        page_act = np.empty(trace.n, dtype=np.int64)
+        page_act[order] = cs - grp_base
+        max_act = np.maximum.accumulate(page_act)
+    else:
+        page_act = np.zeros(0, dtype=np.int64)
+        max_act = np.zeros(0, dtype=np.int64)
+
     return {
         "col": col,
         "is_write": is_write,
@@ -354,5 +376,7 @@ def preprocess(trace: Trace, cfg: HMSConfig) -> Dict[str, np.ndarray]:
         "run_ncols": run_ncols[run_id].astype(np.float32),
         "run_haswrite": run_haswrite[run_id],
         "amil_excluded": amil_excluded,
+        "page_act": page_act.astype(np.int32),
+        "max_act": max_act.astype(np.int32),
         "n_pages": n_pages,
     }

@@ -47,12 +47,12 @@ class TierConfig:
     @property
     def timing_fast(self) -> DeviceTiming:
         return DeviceTiming(rcd=int(self.fast_setup_us),
-                            wr=int(self.fast_write_us))
+                            wr=int(self.fast_write_us), kind="dram")
 
     @property
     def timing_slow(self) -> DeviceTiming:
         return DeviceTiming(rcd=int(self.slow_setup_us),
-                            wr=int(self.slow_write_us))
+                            wr=int(self.slow_write_us), kind="scm")
 
     @property
     def num_supers(self) -> int:

@@ -1,0 +1,118 @@
+"""Golden parity + compile-once guarantees of the batched HMS engine.
+
+The batched engine in ``repro.core.simulator`` must reproduce the seed
+engine (frozen in ``repro.core._reference``) counter-for-counter, compile
+exactly once across runtime-scalar sweeps, and give identical results
+whether configs run sequentially or vmapped through ``simulate_many``.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import HMSConfig, simulate, simulate_many
+from repro.core._reference import reference_counters
+from repro.core.simulator import _COUNTERS, _engine_key, engine_trace_count
+from repro.core.traces import Trace
+
+
+def _golden_trace(n=6000, footprint=4 * 2**20, seed=7):
+    """Fixed seeded mix of random and streaming requests with writes."""
+    rng = np.random.default_rng(seed)
+    total = footprint // 32
+    col = np.concatenate([
+        rng.integers(0, total, size=n // 2),
+        (rng.integers(0, total, size=1)[0] + np.arange(n - n // 2)) % total,
+    ]).astype(np.int64)
+    wr = rng.random(n) < 0.3
+    return Trace("golden", col, wr, footprint)
+
+
+GOLDEN_CONFIGS = [
+    {},                                        # full HMS, AMIL
+    {"tag_layout": "tad"},
+    {"policy": "no_bypass"},
+    {"policy": "no_second_level", "n_levels": 8},
+    {"policy": "bear", "scm_mode": "slc"},
+    {"policy": "mccache"},
+    {"policy": "redcache"},
+    {"policy": "no_bypass_no_ctc", "throttle_wr": True},
+]
+
+
+@pytest.mark.parametrize(
+    "kw", GOLDEN_CONFIGS,
+    ids=["hms", "tad", "no_bypass", "no_2nd", "bear", "mccache",
+         "redcache", "no_ctc"])
+def test_golden_parity_vs_reference(kw):
+    """Every counter of the batched engine matches the seed scan engine."""
+    t = _golden_trace()
+    cfg = HMSConfig(footprint=t.footprint, **kw)
+    ref = reference_counters(t, cfg)
+    new = simulate(t, cfg).counters
+    assert set(ref) == set(_COUNTERS) == set(new)
+    for k in _COUNTERS:
+        np.testing.assert_allclose(new[k], ref[k], rtol=1e-9, atol=1e-6,
+                                   err_msg=f"counter {k} diverged for {kw}")
+
+
+def test_runtime_scalar_sweep_compiles_once():
+    """Configs differing only in runtime scalars share one compiled engine."""
+    t = _golden_trace()
+    base = HMSConfig(footprint=t.footprint).validate()
+    key = _engine_key(t, base)
+    simulate(t, base)
+    warm = engine_trace_count(key)
+    assert warm >= 1
+    sweeps = (
+        {"scm_mode": "slc"},
+        {"scm_mode": "tlc"},
+        {"ema_weight": 0.05},
+        {"n_levels": 8},
+        {"tag_layout": "tad"},
+        {"throttle_act": True, "throttle_wr": True},
+        {"use_activation_counter": True},
+        {"organization": "separate"},
+    )
+    for kw in sweeps:
+        cfg = dataclasses.replace(base, **kw).validate()
+        assert _engine_key(t, cfg) == key, f"{kw} changed the static key"
+        simulate(t, cfg)
+    assert engine_trace_count(key) == warm, (
+        "runtime-scalar sweep re-traced the engine")
+
+
+def test_simulate_many_matches_sequential():
+    """Batched vmap execution reproduces per-config sequential counters."""
+    t = _golden_trace()
+    kws = [
+        {},
+        {"scm_mode": "slc"},
+        {"tag_layout": "tad"},
+        {"ctc_fraction": 0.125},          # different CTC sets, same batch
+        {"ema_weight": 0.05},
+        {"policy": "bear"},               # different static structure
+        {"organization": "scm"},          # non-scan path
+    ]
+    cfgs = [HMSConfig(footprint=t.footprint, **kw) for kw in kws]
+    batched = simulate_many(t, cfgs)
+    assert len(batched) == len(cfgs)
+    for kw, cfg, rb in zip(kws, cfgs, batched):
+        rs = simulate(t, cfg)
+        for k in _COUNTERS:
+            np.testing.assert_allclose(
+                rb.counters[k], rs.counters[k], rtol=1e-9, atol=1e-6,
+                err_msg=f"simulate_many diverged on {k} for {kw}")
+        assert rb.config.policy == cfg.policy
+
+
+def test_event_counters_are_exact_integers():
+    """Pure event counts must come out as exact whole numbers."""
+    t = _golden_trace()
+    r = simulate(t, HMSConfig(footprint=t.footprint))
+    for k in ("hit_r", "hit_w", "miss_r", "miss_w", "fills", "dirty_evicts",
+              "bypass_l1", "bypass_l2", "ctc_hit", "ctc_miss", "aff_decs"):
+        assert r.counters[k] == int(r.counters[k]), k
+    assert (r.counters["hit_r"] + r.counters["miss_r"]
+            + r.counters["hit_w"] + r.counters["miss_w"]) == t.n
