@@ -2,15 +2,13 @@
 
 from __future__ import annotations
 
-import dataclasses
-import json
 import os
 import time
 from typing import Dict, List
 
 import numpy as np
 
-from repro.core import HMSConfig, make_trace, simulate, simulate_many
+from repro.core import HMSConfig, make_trace, simulate_many
 
 # representative subset (full suite via REPRO_BENCH_FULL=1)
 WORKLOADS = ["stencil", "pathfnd", "bfs_tu", "sssp_ttc", "kcore",
@@ -19,33 +17,32 @@ if os.environ.get("REPRO_BENCH_FULL"):
     from repro.core.traces import WORKLOADS as _ALL
     WORKLOADS = list(_ALL)
 
-N = int(os.environ.get("REPRO_BENCH_N", 120_000))
 
-_trace_cache: Dict[str, object] = {}
+def bench_n() -> int:
+    """Trace length, read per call so REPRO_BENCH_N changes mid-process
+    take effect (cache keys include it, so no stale results)."""
+    return int(os.environ.get("REPRO_BENCH_N", 120_000))
+
+
+_trace_cache: Dict[tuple, object] = {}
 _result_cache: Dict[tuple, object] = {}
 
 
 def trace(name):
-    if name not in _trace_cache:
-        _trace_cache[name] = make_trace(name, n=N)
-    return _trace_cache[name]
+    key = (name, bench_n())
+    if key not in _trace_cache:
+        _trace_cache[key] = make_trace(name, n=bench_n())
+    return _trace_cache[key]
 
 
 def _key(workload, cfg_kw):
-    return (workload, tuple(sorted(cfg_kw.items())))
+    return (workload, bench_n(), tuple(sorted(cfg_kw.items())))
 
 
 def sim(workload: str, **cfg_kw):
-    key = _key(workload, cfg_kw)
-    if key in _result_cache:
-        return _result_cache[key]
-    t = trace(workload)
-    cfg = HMSConfig(footprint=t.footprint, **cfg_kw)
-    t0 = time.time()
-    r = simulate(t, cfg)
-    r.wall_s = time.time() - t0
-    _result_cache[key] = r
-    return r
+    """One config point, routed through ``sim_many`` so every simulation —
+    single or swept — shares the batched engine path and result cache."""
+    return sim_many(workload, [cfg_kw])[0]
 
 
 def sim_many(workload: str, cfg_kws):

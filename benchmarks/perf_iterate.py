@@ -70,7 +70,7 @@ def hms_sweep(args):
 
     from repro.core import HMSConfig, make_trace, simulate, simulate_many
     from repro.core.simulator import (engine_cache_size, engine_trace_count,
-                                      group_engine_key)
+                                      group_engine_key, set_max_shards)
 
     t = make_trace(args.workload, n=args.n)
     grid = [{"tag_layout": lay, "ctc_fraction": frac, "scm_mode": mode}
@@ -92,12 +92,32 @@ def hms_sweep(args):
     drift = max(abs(a.runtime_cycles - b.runtime_cycles)
                 / max(a.runtime_cycles, 1.0) for a, b in zip(seq, bat))
     out["max_runtime_drift"] = drift
+    # shard speedup: one warm config point, auto shard count vs the forced
+    # S=1 sequential scan (the PR 2 execution shape)
+    base = cfgs[0]
+    key = group_engine_key(t, [base])
+    simulate(t, base)
+    t0 = time.time()
+    simulate(t, base)
+    out["single_auto_s"] = time.time() - t0
+    old = set_max_shards(1)
+    try:
+        simulate(t, base)
+        t0 = time.time()
+        simulate(t, base)
+        out["single_s1_s"] = time.time() - t0
+    finally:
+        set_max_shards(old)
+    out["shards"] = key.shards
+    out["shard_speedup"] = out["single_s1_s"] / max(out["single_auto_s"], 1e-9)
     print(f"hms-sweep {args.workload} n={args.n} points={len(grid)}: "
           f"sequential {out['sequential_s']:.1f}s "
           f"({out['sequential_s']/len(grid)*1e3:.0f}ms/pt), "
           f"batched {out['batched_s']:.1f}s "
           f"({out['batched_s']/len(grid)*1e3:.0f}ms/pt), "
-          f"{out['speedup']:.1f}x, drift={drift:.2e}", flush=True)
+          f"{out['speedup']:.1f}x, drift={drift:.2e}, "
+          f"shards={out['shards']} "
+          f"shard_speedup={out['shard_speedup']:.1f}x", flush=True)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)

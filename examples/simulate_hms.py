@@ -18,7 +18,7 @@ def main():
                              "llm_dec"])
     args = ap.parse_args()
 
-    from repro.core import HMSConfig, make_trace, simulate
+    from repro.core import HMSConfig, make_trace, simulate_many
 
     print(f"{'workload':10s} {'HBM(ovs)':>9s} {'SCM':>7s} {'HMS':>7s} "
           f"{'hitR':>5s} {'hitW':>5s} {'CTC':>5s} {'byp1':>5s} "
@@ -26,10 +26,14 @@ def main():
     for w in args.workloads:
         t = make_trace(w, n=args.n)
         base = dict(footprint=t.footprint)
-        inf = simulate(t, HMSConfig(organization="inf_hbm", **base))
-        hbm = simulate(t, HMSConfig(organization="hbm", **base))
-        scm = simulate(t, HMSConfig(organization="scm", **base))
-        hms = simulate(t, HMSConfig(**base))
+        # one batched call per workload: the HMS point runs the compile-once
+        # shard-parallel scan, the rest are vectorized single-tier models
+        inf, hbm, scm, hms = simulate_many(t, [
+            HMSConfig(organization="inf_hbm", **base),
+            HMSConfig(organization="hbm", **base),
+            HMSConfig(organization="scm", **base),
+            HMSConfig(**base),
+        ])
         rel = lambda r: r.runtime_cycles / inf.runtime_cycles
         esave = 1 - sum(hms.energy_pj.values()) / sum(hbm.energy_pj.values())
         print(f"{w:10s} {rel(hbm):9.2f} {rel(scm):7.2f} {rel(hms):7.2f} "

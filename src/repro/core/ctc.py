@@ -24,10 +24,17 @@ import jax.numpy as jnp
 
 
 def init_state(sets: int, ways: int, sectors: int) -> Dict[str, jnp.ndarray]:
+    # Ages start as a permutation 0..ways-1 per set (way 0 MRU).  An all-zero
+    # init would break LRU: the aging rule only bumps ages *below* the touched
+    # way's age, so from all-zeros every way keeps age 0 and the victim argmax
+    # degenerates to way 0 forever — a 16-way CTC would thrash one way.  The
+    # permutation is an invariant of probe_fill_touch (property-tested), and
+    # it keeps disabled ways (indices >= enabled_ways) at the high ages where
+    # the masked victim selection never picks them.
     return {
         "tags": jnp.full((sets, ways), -1, dtype=jnp.int32),
         "svalid": jnp.zeros((sets, ways, sectors), dtype=jnp.bool_),
-        "age": jnp.zeros((sets, ways), dtype=jnp.int32),
+        "age": jnp.tile(jnp.arange(ways, dtype=jnp.int32), (sets, 1)),
     }
 
 
@@ -112,7 +119,8 @@ def probe_fill_touch(state, row_group, sector, enabled_ways, n_sets=None):
     gathers one set row, computes both candidate rows, and scatters the
     selected row back — O(ways*sectors) per step instead of the full-state
     O(sets*ways*sectors) select.  State-identical to the probe/fill/touch
-    composition (the engine-parity golden test pins this).
+    composition (the engine-parity golden test pins this); the simulator's
+    hot loop runs the packed re-encoding below instead.
 
     Returns ``(new_state, sector_hit)``.
     """
@@ -160,6 +168,75 @@ def probe_fill_touch(state, row_group, sector, enabled_ways, n_sets=None):
 
 def invalidate_all(state):
     return init_state(*state["svalid"].shape)
+
+
+# ---------------------------------------------------------------------------
+# Packed state variant (the simulator's hot loop).
+# ---------------------------------------------------------------------------
+#
+# One int64 word per (set, way) instead of tags + ages + a bool sector
+# matrix:
+#     word = (tag + 1) << 40 | age << 32 | sector_valid_bitmask
+# (tag+1 == 0 means invalid line).  This is a pure re-encoding of the
+# reference state — probe_fill_touch_packed computes the same hit and
+# successor state as probe_fill_touch (the golden parity tests pin the
+# equivalence through the engine) with one gather, one scatter and one
+# argmax per access, which is what the shard-parallel scan is bound by.
+# The victim argmax folds hit-way / present-line / LRU selection into a
+# single score: sector hit > line hit > enabled-way age > disabled (-1);
+# ages stay a permutation of 0..ways-1 (see init_state), so the selection
+# is unique and identical to the reference's three-argmax cascade.
+
+def packed_init(sets: int, ways: int, sectors: int) -> jnp.ndarray:
+    assert ways <= 256, "age field is 8 bits"
+    assert sectors <= 32, "sector valid mask is 32 bits"
+    return jnp.tile(jnp.arange(ways, dtype=jnp.int64) << 32, (sets, 1))
+
+
+def probe_fill_touch_packed(state, row_group, sector, enabled_ways,
+                            n_sets, update=None):
+    """Packed-state equivalent of :func:`probe_fill_touch`.
+
+    ``row_group + 1`` must stay below 2**23 (tag field width); the engine
+    asserts this on its shard-local row groups.  Returns
+    ``(new_state, sector_hit)``.
+    """
+    set_idx = row_group % n_sets
+    row = state[set_idx]                       # (ways,) int64
+    ways = row.shape[0]
+    mask = jnp.arange(ways) < enabled_ways
+    rg = jnp.asarray(row_group, jnp.int64)
+    sec = jnp.asarray(sector, jnp.int64)
+
+    tagp1 = row >> 40
+    age = (row >> 32) & 0xFF
+    svmask = row & 0xFFFFFFFF
+    line_hit = (tagp1 == rg + 1) & mask
+    sector_hit = line_hit & (((svmask >> sec) & 1) == 1)
+    hit = jnp.any(sector_hit)
+    line_present = jnp.any(line_hit)
+
+    score = jnp.where(mask, age, -1)
+    score = jnp.where(line_hit, jnp.int64(1) << 20, score)
+    score = jnp.where(sector_hit, jnp.int64(2) << 20, score)
+    way = jnp.argmax(score)
+    onehot = jnp.arange(ways) == way
+
+    # LRU touch (hit and miss paths share it; ``way`` is the touched way)
+    my_age = jnp.max(jnp.where(onehot, age, 0))
+    new_age = jnp.where(age < my_age, age + 1, age)
+    new_age = jnp.where(onehot, 0, new_age)
+
+    # fill path (miss only): reuse a present line's sectors, else clear
+    fill_sv = jnp.where(line_present, svmask, 0) | (jnp.int64(1) << sec)
+    miss_upd = onehot & ~hit
+    new_tagp1 = jnp.where(miss_upd, rg + 1, tagp1)
+    new_sv = jnp.where(miss_upd, fill_sv, svmask)
+
+    new_row = (new_tagp1 << 40) | (new_age << 32) | new_sv
+    if update is not None:
+        new_row = jnp.where(update, new_row, row)
+    return state.at[set_idx].set(new_row), hit
 
 
 SECTOR_BYTES = 4       # one AMIL tag bundle (the metadata of one DRAM row)

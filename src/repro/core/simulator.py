@@ -20,15 +20,16 @@ MSHR run), host-link occupancy, serialized fault handling, and a compute
 floor.  Counters are float64 (x64 is enabled on import: traces are ~10^6
 requests and fp32 accumulators would lose increments).
 
-Engine architecture (compile-once, batched)
--------------------------------------------
+Engine architecture (compile-once, batched, shard-parallel)
+-----------------------------------------------------------
 The paper's headline results are design-space *sweeps*, so the engine is
-split so a sweep costs one compile:
+split so a sweep costs one compile and one short device loop:
 
   * **Static structure** — the policy's Python-level branching and every
-    array shape (trace length, DRAM-cache slots, CTC geometry) — forms an
-    ``_EngineKey`` into a module-level jit cache.  Slot/set allocations are
-    bucketed to powers of two so nearby footprints share a compiled engine.
+    array shape (trace length, shard count/depth, DRAM-cache slots, CTC
+    geometry) — forms an ``_EngineKey`` into a module-level jit cache.
+    Slot/set allocations are bucketed to powers of two so nearby footprints
+    share a compiled engine.
   * **Runtime scalars** — device timings, ``ema_weight``, ``n_levels``,
     ``bear_fill_prob``, thresholds, enabled CTC ways/sets, tag-layout costs
     — are traced arguments; sweeping them never re-traces.
@@ -37,11 +38,27 @@ split so a sweep costs one compile:
     maxima (tiny scalar scan + ``lax.cummax``), activation-counter values
     (segmented prefix sums in ``preprocess``), the xorshift dice stream, and
     per-column activation shares.  The scan carries only genuinely stateful
-    arrays (cache tags/valid/dirty/affinity + CTC state) and emits per-step
-    decision flags from which all counters are reduced vectorially.
+    arrays (packed DRAM-cache words + CTC state) and emits per-step decision
+    flags from which all counters are reduced vectorially.
+  * **Shard parallelism** — the carried state partitions by address: a
+    cache slot belongs to exactly one row group, and a power-of-two shard
+    factor S dividing the CTC set count makes ``row_group % S`` a function
+    of the CTC set index too.  ``traces.shard_plan`` stable-partitions the
+    trace into S state-disjoint shards and remaps slots / row groups to
+    shard-local indices; the engine gathers the precomputed per-request
+    stream into ``(S, depth)`` shard layout, ``vmap``s the lean scan over
+    shards (padded steps are gated no-ops), and scatters the decision flags
+    back to trace order for the unchanged counter reduction.  The device
+    loop shrinks from N sequential steps to max-shard-depth (~N/S) steps,
+    exactly — parity with the sequential formulation is bit-for-bit because
+    every slot and CTC set still sees its original request subsequence in
+    order.  ``S`` is chosen per engine key (capped by ``REPRO_SHARDS`` /
+    :func:`set_max_shards`, shard depth, and the CTC set counts of every
+    config sharing the compile); S=1 reproduces the PR 2 sequential engine.
   * ``simulate_many`` vmaps the compiled engine over a batch of runtime
     parameter sets sharing one static structure, so Fig. 18-style CTC
-    sweeps and policy ablations cost one compile + one device loop.
+    sweeps and policy ablations cost one compile + one device loop over
+    ``configs x shards``.
 
 The seed formulation survives in ``_reference`` and a golden-parity test
 pins this engine to it counter-for-counter.
@@ -50,6 +67,8 @@ pins this engine to it counter-for-counter.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
 import types
 from typing import Dict, List, Sequence
 
@@ -65,10 +84,11 @@ from . import ctc as ctc_mod
 from .timing import (
     COLUMN_BYTES,
     COLUMNS_PER_ROW,
+    POLICIES_WITH_CTC,
     UM_PAGE_BYTES,
     HMSConfig,
 )
-from .traces import Trace, preprocess
+from .traces import Trace, geometry_key, preprocess, shard_plan
 
 _COUNTERS = (
     # bus traffic, in 32B columns
@@ -123,27 +143,93 @@ def _bucket(n: int) -> int:
 class _EngineKey:
     policy: str
     n: int                  # trace length
-    lines_alloc: int        # DRAM-cache slot allocation (bucketed)
-    ctc_sets_alloc: int
+    shards: int             # shard-parallel width S (1 = sequential scan)
+    depth: int              # padded per-shard scan length
+    lines_alloc: int        # per-shard DRAM-cache slot allocation (bucketed)
+    ctc_sets_alloc: int     # per-shard CTC set allocation (bucketed)
     ctc_ways_alloc: int
     ctc_sectors: int
 
 
+_USES_CTC = POLICIES_WITH_CTC
+
+# Shard-count cap (REPRO_SHARDS=1 forces the sequential engine).
+_MAX_SHARDS = int(os.environ.get("REPRO_SHARDS", "64"))
+
+# Scan-step cost model for shard selection, in microseconds (measured on a
+# CPU host; the *shape* is what matters, exact constants only move the
+# break-even point).  One step costs a fixed dispatch overhead plus
+# per-(shard x config) lane work — sharding divides steps but multiplies
+# lanes, so the optimum depends on the measured shard depths (zipf traces
+# bin unevenly) and the batch width, not "as many shards as possible".
+# A lone-lane scan (batch 1, S=1) empirically falls off the vectorized
+# path and costs several times the extrapolated lane cost, hence the
+# separate solo constant.
+_STEP_COST_SOLO = 19.0
+_STEP_OVERHEAD = 3.0
+_LANE_COST = 1.0
+
+
+def _step_cost(lanes: int) -> float:
+    if lanes == 1:
+        return _STEP_COST_SOLO
+    return _STEP_OVERHEAD + _LANE_COST * lanes
+
+
+def set_max_shards(cap: int) -> int:
+    """Set the shard-count cap (1 = sequential engine); returns the old cap.
+    Benchmarks use this to measure shard speedup against the S=1 scan."""
+    global _MAX_SHARDS
+    old, _MAX_SHARDS = _MAX_SHARDS, max(1, int(cap))
+    return old
+
+
+_FORCED_SHARDS: int | None = None
+
+
+def set_forced_shards(n: int | None) -> int | None:
+    """Pin the shard count, bypassing the cost model (any count is valid —
+    set bins just go empty past the partition-domain size).  Tests use this
+    so shard-parallel coverage doesn't depend on host-tuned cost constants.
+    ``None`` restores automatic selection; returns the previous value."""
+    global _FORCED_SHARDS
+    old = _FORCED_SHARDS
+    _FORCED_SHARDS = None if n is None else max(1, int(n))
+    return old
+
+
+def _select_shards(trace: Trace, cfgs: Sequence[HMSConfig],
+                   batch: int) -> int:
+    """Shard count minimizing modeled scan cost for one compiled engine
+    shared by ``batch`` configs: ``depth_S * step_cost(S * batch)`` over
+    power-of-two candidates, with real (LPT-binned) shard depths."""
+    from .traces import shard_depth
+
+    if _FORCED_SHARDS is not None:
+        return _FORCED_SHARDS
+    best_s, best_cost = 1, None
+    s = 1
+    while s <= _MAX_SHARDS:
+        depth = max(shard_depth(trace, c, s) for c in cfgs)
+        cost = depth * _step_cost(s * batch)
+        # a bigger S must beat the incumbent clearly (ties -> fewer shards)
+        if best_cost is None or cost < 0.95 * best_cost:
+            best_s, best_cost = s, cost
+        s *= 2
+    return best_s
+
+
 def _engine_key(trace: Trace, cfg: HMSConfig) -> _EngineKey:
-    return _EngineKey(
-        policy=cfg.policy,
-        n=trace.n,
-        lines_alloc=_bucket(cfg.num_lines),
-        ctc_sets_alloc=_bucket(cfg.ctc_sets),
-        ctc_ways_alloc=_bucket(cfg.ctc_ways),
-        ctc_sectors=cfg.ctc_sectors_per_line,
-    )
+    return group_engine_key(trace, [cfg])
 
 
-def _runtime_params(cfg: HMSConfig) -> Dict[str, np.ndarray]:
+def _runtime_params(cfg: HMSConfig,
+                    n_sets_local: int = -1) -> Dict[str, np.ndarray]:
     """Everything the engine treats as data: sweeping these re-uses the
     compiled scan.  Timing values are exact small integers, so f32 carries
-    them losslessly (matching the seed engine's weak-typed arithmetic)."""
+    them losslessly (matching the seed engine's weak-typed arithmetic).
+    ``n_sets_local`` is the *shard-local* CTC set count from the shard plan
+    (the sets of one config partition across its shards)."""
     dram, scm = cfg.dram_timing, cfg.scm_timing
     amil = cfg.tag_layout == "amil"
     return {
@@ -157,7 +243,8 @@ def _runtime_params(cfg: HMSConfig) -> Dict[str, np.ndarray]:
         "bear_fill_prob": np.float32(cfg.bear_fill_prob),
         "redcache_threshold": np.int32(cfg.redcache_threshold),
         "ctc_ways": np.int32(cfg.ctc_ways),
-        "ctc_sets": np.int32(cfg.ctc_sets),
+        "ctc_sets": np.int32(cfg.ctc_sets if n_sets_local < 0
+                             else n_sets_local),
         "probe_cost": np.float32(1.0 if amil else float(cfg.lines_per_row)),
         "meta_wr_cost": np.float32(1.0 if amil else 0.0),
         "cpl": np.float32(cfg.columns_per_line),
@@ -166,43 +253,55 @@ def _runtime_params(cfg: HMSConfig) -> Dict[str, np.ndarray]:
 
 # ---------------------------------------------------------------------------
 # Dice stream: the seed engine steps one xorshift32 per request from a fixed
-# seed, so the whole stream is trace-position-only.  Grown lazily and shared
-# across every simulation.
+# seed, so the whole stream is trace-position-only.  Generated by a jitted
+# device scan (the seed's interpreted per-element Python loop was O(N) host
+# work on every first use of a trace length); lengths are bucketed to powers
+# of two so the generator compiles a handful of times, and slices are cached
+# per exact length.
 # ---------------------------------------------------------------------------
 
-_DICE_CHAIN = np.zeros(0, dtype=np.uint32)
 _DICE_F32: Dict[int, np.ndarray] = {}
 
 
+@functools.lru_cache(maxsize=None)
+def _dice_chain(m: int) -> np.ndarray:
+    def gen():
+        def step(s, _):
+            s = bp.xorshift32(s)
+            return s, s
+        _, chain = jax.lax.scan(
+            step, jnp.asarray(_RNG_SEED, jnp.uint32), None,
+            length=m, unroll=64)
+        return chain
+    return np.asarray(jax.jit(gen, static_argnums=())())
+
+
 def _dice(n: int) -> np.ndarray:
-    global _DICE_CHAIN
     if n not in _DICE_F32:
-        if _DICE_CHAIN.size < n:
-            s = int(_DICE_CHAIN[-1]) if _DICE_CHAIN.size else _RNG_SEED
-            ext = np.empty(n - _DICE_CHAIN.size, dtype=np.uint32)
-            for i in range(ext.size):
-                s = (s ^ (s << 13)) & 0xFFFFFFFF
-                s = s ^ (s >> 17)
-                s = (s ^ (s << 5)) & 0xFFFFFFFF
-                ext[i] = s
-            _DICE_CHAIN = np.concatenate([_DICE_CHAIN, ext])
-        # cached per length so repeated calls skip regenerating/converting
-        # the chain (the batched path still stacks per-config copies)
-        _DICE_F32[n] = (_DICE_CHAIN[:n].astype(np.float32)
+        chain = _dice_chain(_bucket(max(1, n)))[:n]
+        _DICE_F32[n] = (chain.astype(np.float32)
                         * np.float32(1.0 / 4294967296.0))
     return _DICE_F32[n]
 
 
-def _engine_inputs(trace: Trace, cfg: HMSConfig, pre) -> Dict[str, np.ndarray]:
+def _engine_inputs(trace: Trace, cfg: HMSConfig, pre,
+                   shards: int, depth: int) -> Dict[str, np.ndarray]:
     # packed-word layout limits (tag<<10 must stay inside int32; affinity
-    # levels live in an 8-bit field)
+    # levels live in an 8-bit field; CTC tag+1 in a 23-bit field)
     assert int(pre["tag"].max(initial=0)) < (1 << 21), "tag overflows packing"
     assert cfg.n_levels <= 256, "affinity level overflows 8-bit packing"
+    plan = shard_plan(trace, cfg, shards)
+    assert int(plan["rg_local"].max(initial=0)) < (1 << 23) - 1, (
+        "row group overflows CTC tag packing")
+    pos = plan["pos"]
+    if plan["depth"] < depth:           # pad to the engine's (group) depth
+        pad = np.full((shards, depth - plan["depth"]), trace.n, np.int32)
+        pos = np.concatenate([pos, pad], axis=1)
     return {
-        "slot": pre["slot"],
+        "slot": plan["slot_local"],
         "tag": pre["tag"],
         "is_write": pre["is_write"],
-        "row_group": pre["row_group"],
+        "row_group": plan["rg_local"],
         "sector": pre["sector"],
         "run_ncols": pre["run_ncols"],
         "run_haswrite": pre["run_haswrite"],
@@ -212,6 +311,7 @@ def _engine_inputs(trace: Trace, cfg: HMSConfig, pre) -> Dict[str, np.ndarray]:
         # TAD sweeps share one compile
         "excluded": pre["amil_excluded"] & (cfg.tag_layout == "amil"),
         "dice": _dice(trace.n),
+        "pos": pos,
     }
 
 
@@ -221,7 +321,7 @@ def _engine_inputs(trace: Trace, cfg: HMSConfig, pre) -> Dict[str, np.ndarray]:
 
 def _make_engine(key: _EngineKey):
     policy = key.policy
-    use_ctc = policy in ("hms", "no_bypass", "no_second_level")
+    use_ctc = policy in _USES_CTC
     ideal_probe = policy in ("bear", "redcache", "mccache")
     two_level = policy in ("hms", "no_second_level")
     mc_wt = policy == "mccache"
@@ -285,27 +385,54 @@ def _make_engine(key: _EngineKey):
         # word is an invalid slot, so no -1 sentinel is needed (the valid bit
         # gates tag comparison).  Unpacked values are exactly the seed
         # engine's int32/bool state, so counters are unchanged.
-        cache = jnp.zeros((key.lines_alloc,), jnp.int32)
-        ctcst = ctc_mod.init_state(
-            key.ctc_sets_alloc, key.ctc_ways_alloc, key.ctc_sectors)
+        #
+        # The scan runs vmapped over ``key.shards`` state-disjoint shards:
+        # the per-request stream is gathered into (shards, depth) layout via
+        # the shard plan's position matrix, each shard carries its own
+        # cache/CTC slice, and padded steps (pos == n) are gated no-ops.
+        # The decision stream is packed into one int32 word per request
+        # (and the CTC state into two words per way) to keep per-lane scan
+        # work minimal — the loop is work-bound, not dispatch-bound, once
+        # configs x shards fills the vector units.
         n_sets = p["ctc_sets"]
         e_ways = p["ctc_ways"]
 
+        pos = jnp.asarray(xs["pos"])                  # (S, depth), pad == n
+        pvalid = pos < key.n
+        posc = jnp.minimum(pos, key.n - 1)
+
+        def gather(a):
+            return jnp.take(jnp.asarray(a), posc, axis=0)
+
+        # one int64 word per request: bits 0 is_write | 1 dec_ok | 2 cand |
+        # 3..7 sector | 8..15 req_aff_lvl | 16 live (pad gate, set after the
+        # shard gather) | 17..39 row group | 40..61 tag — two input streams
+        # (slot + meta) instead of eight keeps the scan's per-step slicing
+        # minimal.
+        meta_tr = (is_write.astype(jnp.int64)
+                   | (dec_ok.astype(jnp.int64) << 1)
+                   | (cand.astype(jnp.int64) << 2)
+                   | (jnp.asarray(xs["sector"], jnp.int64) << 3)
+                   | (req_aff_lvl.astype(jnp.int64) << 8)
+                   | (jnp.asarray(xs["row_group"], jnp.int64) << 17)
+                   | (jnp.asarray(xs["tag"], jnp.int64) << 40))
         scan_xs = {
-            "slot": jnp.asarray(xs["slot"]),
-            "tag": jnp.asarray(xs["tag"]),
-            "is_write": is_write,
-            "cand": cand,
-            "req_aff_lvl": req_aff_lvl,
-            "dec_ok": dec_ok,
-            "row_group": jnp.asarray(xs["row_group"]),
-            "sector": jnp.asarray(xs["sector"]),
+            "slot": gather(xs["slot"]),
+            "meta": gather(meta_tr) | (pvalid.astype(jnp.int64) << 16),
         }
 
         def step(carry, x):
             cache, ctcst = carry
             slot = x["slot"]
-            tag = x["tag"]
+            meta = x["meta"]
+            tag = (meta >> 40).astype(jnp.int32)
+            rg = (meta >> 17) & 0x7FFFFF
+            live = (meta & (1 << 16)) != 0
+            is_wr = (meta & 1) != 0
+            x_dec_ok = (meta & 2) != 0
+            x_cand = (meta & 4) != 0
+            sector = (meta >> 3) & 0x1F
+            raff = ((meta >> 8) & 0xFF).astype(jnp.int32)
 
             word = cache[slot]
             victim_valid = (word & 1) == 1
@@ -315,8 +442,8 @@ def _make_engine(key: _EngineKey):
             hit = victim_valid & (stored_tag == tag)
 
             if use_ctc:
-                ctcst, c_hit = ctc_mod.probe_fill_touch(
-                    ctcst, x["row_group"], x["sector"], e_ways, n_sets)
+                ctcst, c_hit = ctc_mod.probe_fill_touch_packed(
+                    ctcst, rg, sector, e_ways, n_sets, update=live)
             elif ideal_probe:
                 c_hit = jnp.asarray(True)
             else:
@@ -324,38 +451,63 @@ def _make_engine(key: _EngineKey):
 
             miss = ~hit
             if policy == "hms":
-                accept = (~victim_valid) | (x["req_aff_lvl"] > victim_aff)
-                need_aff_read = miss & x["cand"] & c_hit & victim_valid
+                accept = (~victim_valid) | (raff > victim_aff)
+                need_aff_read = miss & x_cand & c_hit & victim_valid
             else:
                 accept = jnp.asarray(True)
                 need_aff_read = jnp.asarray(False)
-            do_fill = miss & x["cand"] & accept
-            rejected = miss & x["cand"] & ~accept
-            dec = rejected & victim_valid & x["dec_ok"]
+            do_fill = miss & x_cand & accept
+            rejected = miss & x_cand & ~accept
+            dec = rejected & victim_valid & x_dec_ok
 
-            set_dirty = (hit | do_fill) & x["is_write"] & dirty_ok
+            set_dirty = (hit | do_fill) & is_wr & dirty_ok
             new_tag = jnp.where(do_fill, tag, stored_tag)
             new_valid = victim_valid | do_fill
             new_dirty = jnp.where(
                 do_fill, set_dirty,
-                ((word & 2) == 2) | (hit & x["is_write"] & dirty_ok))
+                ((word & 2) == 2) | (hit & is_wr & dirty_ok))
             new_aff = jnp.where(
                 do_fill,
-                x["req_aff_lvl"],
+                raff,
                 jnp.maximum(victim_aff - dec.astype(jnp.int32), 0),
             )
             new_word = ((new_tag << 10) | (new_aff << 2)
                         | (new_dirty.astype(jnp.int32) << 1)
                         | new_valid.astype(jnp.int32))
-            cache = cache.at[slot].set(new_word)
+            cache = cache.at[slot].set(jnp.where(live, new_word, word))
 
-            ys = {"hit": hit, "c_hit": c_hit, "do_fill": do_fill,
-                  "rejected": rejected, "dec": dec,
-                  "wb": do_fill & victim_dirty,
-                  "need_aff_read": need_aff_read}
-            return (cache, ctcst), ys
+            # decision flags, packed so one scatter restores trace order
+            y = (hit.astype(jnp.int32)
+                 | (jnp.asarray(c_hit, jnp.int32) << 1)
+                 | (do_fill.astype(jnp.int32) << 2)
+                 | (rejected.astype(jnp.int32) << 3)
+                 | (dec.astype(jnp.int32) << 4)
+                 | ((do_fill & victim_dirty).astype(jnp.int32) << 5)
+                 | (jnp.asarray(need_aff_read, jnp.int32) << 6))
+            return (cache, ctcst), y
 
-        _, ys = jax.lax.scan(step, (cache, ctcst), scan_xs)
+        def shard_scan(sh_xs):
+            cache = jnp.zeros((key.lines_alloc,), jnp.int32)
+            ctcst = ctc_mod.packed_init(
+                key.ctc_sets_alloc, key.ctc_ways_alloc, key.ctc_sectors)
+            _, y = jax.lax.scan(step, (cache, ctcst), sh_xs)
+            return y
+
+        y_sh = jax.vmap(shard_scan)(scan_xs)          # (S, depth) int32
+
+        # scatter the packed decision words back to trace order; padding
+        # sentinels land in the dropped overflow slot n
+        y_tr = jnp.zeros((key.n + 1,), jnp.int32).at[pos.reshape(-1)].set(
+            y_sh.reshape(-1))[: key.n]
+        ys = {
+            "hit": (y_tr & 1) != 0,
+            "c_hit": (y_tr & 2) != 0,
+            "do_fill": (y_tr & 4) != 0,
+            "rejected": (y_tr & 8) != 0,
+            "dec": (y_tr & 16) != 0,
+            "wb": (y_tr & 32) != 0,
+            "need_aff_read": (y_tr & 64) != 0,
+        }
 
         # ---- vectorized counter reduction ---------------------------------
         hit = ys["hit"]
@@ -467,19 +619,29 @@ def engine_trace_count(key: _EngineKey) -> int:
 
 def group_engine_key(trace: Trace, configs: Sequence[HMSConfig]) -> _EngineKey:
     """The engine key ``simulate_many`` uses for a batch of scan configs
-    (allocations are the bucketed group maxima, so this can differ from any
-    single config's ``_engine_key``)."""
+    (shard count and allocations are group-wide, so this can differ from any
+    single config's ``_engine_key``).  Shard plans and allocations derive
+    from cached per-config preprocessing."""
     cfgs = [c.validate() for c in configs]
     policies = {c.policy for c in cfgs}
     sectors = {c.ctc_sectors_per_line for c in cfgs}
     assert len(policies) == 1 and len(sectors) == 1, (
         "group_engine_key wants configs from one static-structure group")
+    policy = policies.pop()
+    shards = _select_shards(trace, cfgs, len(cfgs))
+    plans = [shard_plan(trace, c, shards) for c in cfgs]
+    use_ctc = policy in _USES_CTC
     return _EngineKey(
-        policy=policies.pop(),
+        policy=policy,
         n=trace.n,
-        lines_alloc=_bucket(max(c.num_lines for c in cfgs)),
-        ctc_sets_alloc=_bucket(max(c.ctc_sets for c in cfgs)),
-        ctc_ways_alloc=_bucket(max(c.ctc_ways for c in cfgs)),
+        shards=shards,
+        depth=max(p["depth"] for p in plans),
+        lines_alloc=_bucket(max(p["lines_bound"] for p in plans)),
+        # non-CTC policies carry no CTC state; allocate the minimum
+        ctc_sets_alloc=_bucket(max(p["n_sets_local"] for p in plans))
+        if use_ctc else 1,
+        ctc_ways_alloc=_bucket(max(c.ctc_ways for c in cfgs))
+        if use_ctc else 1,
         ctc_sectors=sectors.pop(),
     )
 
@@ -522,12 +684,19 @@ def _batched_engine_for(key: _EngineKey):
     return _BATCHED_CACHE[key]
 
 
+def _local_sets(trace: Trace, cfg: HMSConfig, key: _EngineKey) -> int:
+    if cfg.policy not in _USES_CTC:
+        return 1
+    return shard_plan(trace, cfg, key.shards)["n_sets_local"]
+
+
 def _run_hms_scan(trace: Trace, cfg: HMSConfig, pre,
                   key: _EngineKey | None = None) -> Dict[str, float]:
     if key is None:
         key = _engine_key(trace, cfg)
     fn = _engine_for(key)
-    C = fn(_engine_inputs(trace, cfg, pre), _runtime_params(cfg))
+    C = fn(_engine_inputs(trace, cfg, pre, key.shards, key.depth),
+           _runtime_params(cfg, _local_sets(trace, cfg, key)))
     return {k: float(v) for k, v in C.items()}
 
 
@@ -804,12 +973,6 @@ def simulate(trace: Trace, cfg: HMSConfig, nvlink: bool = False) -> SimResult:
     return _finish_hms(trace, cfg, C, nvlink)
 
 
-def _pre_geometry_key(cfg: HMSConfig) -> tuple:
-    """Everything ``preprocess`` depends on besides the trace."""
-    return (cfg.line_bytes, cfg.dram_cache_capacity,
-            cfg.ctc_sectors_per_line, cfg.act_page_bytes)
-
-
 def simulate_many(trace: Trace, configs: Sequence[HMSConfig],
                   nvlink: bool = False) -> List[SimResult]:
     """Simulate one trace under many configs, batching compatible configs.
@@ -817,20 +980,13 @@ def simulate_many(trace: Trace, configs: Sequence[HMSConfig],
     Configs whose static structure matches (same policy and compatible
     bucketed geometry) are vmapped over their runtime parameters and run as
     one compiled, batched scan — a CTC-way sweep or tag-layout ablation
-    costs one compile + one device loop.  Non-scan organizations (inf_hbm /
-    scm / hbm) fall back to the sequential path.  Results come back in input
-    order and match sequential ``simulate`` counter-for-counter.
+    costs one compile + one device loop over ``configs x shards``.
+    Non-scan organizations (inf_hbm / scm / hbm) fall back to the
+    sequential path.  Results come back in input order and match sequential
+    ``simulate`` counter-for-counter.
     """
     configs = [c.validate() for c in configs]
     results: List[SimResult | None] = [None] * len(configs)
-
-    pres: Dict[tuple, dict] = {}
-
-    def pre_for(cfg):
-        gk = _pre_geometry_key(cfg)
-        if gk not in pres:
-            pres[gk] = preprocess(trace, cfg)
-        return pres[gk]
 
     groups: Dict[tuple, List[int]] = {}
     for i, cfg in enumerate(configs):
@@ -844,13 +1000,17 @@ def simulate_many(trace: Trace, configs: Sequence[HMSConfig],
         key = group_engine_key(trace, [configs[i] for i in idxs])
         if len(idxs) == 1:
             i = idxs[0]
-            C = _run_hms_scan(trace, configs[i], pre_for(configs[i]), key)
+            C = _run_hms_scan(trace, configs[i],
+                              preprocess(trace, configs[i]), key)
             results[i] = _finish_hms(trace, configs[i], C, nvlink)
             continue
-        xs_list = [_engine_inputs(trace, configs[i], pre_for(configs[i]))
+        xs_list = [_engine_inputs(trace, configs[i],
+                                  preprocess(trace, configs[i]),
+                                  key.shards, key.depth)
                    for i in idxs]
         xs = {k: np.stack([x[k] for x in xs_list]) for k in xs_list[0]}
-        params_list = [_runtime_params(configs[i]) for i in idxs]
+        params_list = [_runtime_params(
+            configs[i], _local_sets(trace, configs[i], key)) for i in idxs]
         params = {k: np.stack([p[k] for p in params_list])
                   for k in params_list[0]}
         fn = _batched_engine_for(key)

@@ -68,6 +68,13 @@ SCM_TLC = DeviceTiming(cl=14, rcd=250, ras=250, wr=2350, rp=14, kind="scm")
 SCM_MODES = {"slc": SCM_SLC, "mlc": SCM_MLC, "tlc": SCM_TLC}
 
 
+# Policies whose engine carries CTC state through the scan.  Shared single
+# source of truth for the simulator's engine branching and the trace shard
+# partitioner (which must partition by CTC set exactly when the engine
+# probes one).
+POLICIES_WITH_CTC = ("hms", "no_bypass", "no_second_level")
+
+
 @dataclasses.dataclass(frozen=True)
 class EnergyParams:
     """pJ/bit access energies (Table I)."""
@@ -209,8 +216,16 @@ class HMSConfig:
 
     @property
     def ctc_sets(self) -> int:
+        """Set count, rounded down to a power of two.
+
+        Hardware indexes sets by bit-masking the row-group address, so a
+        non-power-of-two count is unrealizable.  Rounding down keeps the
+        modeled capacity within the ``ctc_fraction`` sector budget (round
+        up would inflate it by up to 2x and skew capacity sweeps).
+        """
         per_line = self.ctc_ways * self.ctc_sectors_per_line
-        return max(1, self.ctc_total_sectors // per_line)
+        raw = max(1, self.ctc_total_sectors // per_line)
+        return 1 << (raw.bit_length() - 1)
 
     @property
     def tag_bits(self) -> int:

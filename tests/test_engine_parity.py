@@ -13,7 +13,8 @@ import pytest
 
 from repro.core import HMSConfig, simulate, simulate_many
 from repro.core._reference import reference_counters
-from repro.core.simulator import _COUNTERS, _engine_key, engine_trace_count
+from repro.core.simulator import (_COUNTERS, _engine_key, engine_trace_count,
+                                  set_forced_shards, set_max_shards)
 from repro.core.traces import Trace
 
 
@@ -105,6 +106,71 @@ def test_simulate_many_matches_sequential():
                 rb.counters[k], rs.counters[k], rtol=1e-9, atol=1e-6,
                 err_msg=f"simulate_many diverged on {k} for {kw}")
         assert rb.config.policy == cfg.policy
+
+
+def _aliasing_trace(n=4000, footprint=64 * 2**20, seed=11, hot_slots=96):
+    """Many tags aliasing onto few DRAM-cache slots: random requests over the
+    full footprint interleaved with a hot stream hammering a small slot
+    range — the conflict-heavy case where any shard-order bug would surface
+    as different fill/evict decisions."""
+    rng = np.random.default_rng(seed)
+    total = footprint // 32
+    hot = rng.integers(0, hot_slots * 8, size=n // 2)      # few slots
+    cold = rng.integers(0, total, size=n - n // 2)         # full tag space
+    col = np.empty(n, dtype=np.int64)
+    col[0::2] = hot
+    col[1::2] = cold
+    wr = rng.random(n) < 0.4
+    return Trace("alias", col, wr, footprint)
+
+
+@pytest.mark.parametrize("kw", [{}, {"policy": "no_bypass"},
+                                {"policy": "mccache"}],
+                         ids=["hms", "no_bypass", "mccache"])
+def test_shard_parallel_parity_vs_reference(kw):
+    """The shard-parallel engine must reproduce the seed scan engine exactly
+    on a trace that aliases many tags onto few slots.  The shard count is
+    pinned (S=4) so the test stays a shard-parallel test regardless of how
+    the host-tuned cost model would choose."""
+    t = _aliasing_trace()
+    # small r_hbm -> small DRAM cache -> deep tag aliasing, and a CTC with
+    # multiple sets so the hms policy distributes across shards too
+    cfg = HMSConfig(footprint=t.footprint, r_hbm=0.1, **kw)
+    old = set_forced_shards(4)
+    try:
+        key = _engine_key(t, cfg)
+        assert key.shards == 4
+        new = simulate(t, cfg).counters
+    finally:
+        set_forced_shards(old)
+    ref = reference_counters(t, cfg)
+    for k in _COUNTERS:
+        np.testing.assert_allclose(new[k], ref[k], rtol=1e-9, atol=1e-6,
+                                   err_msg=f"counter {k} diverged for {kw}")
+
+
+def test_shard_engine_matches_sequential_scan():
+    """Pinned shard-parallel execution == forced S=1 sequential scan,
+    counter for counter, on a real (zipf-skewed) workload trace."""
+    from repro.core import make_trace
+
+    t = make_trace("bfs_tu", n=30_000)
+    cfg = HMSConfig(footprint=t.footprint)
+    old = set_forced_shards(8)
+    try:
+        assert _engine_key(t, cfg).shards == 8
+        sharded = simulate(t, cfg).counters
+    finally:
+        set_forced_shards(old)
+    old_cap = set_max_shards(1)
+    try:
+        assert _engine_key(t, cfg).shards == 1
+        seq = simulate(t, cfg).counters
+    finally:
+        set_max_shards(old_cap)
+    for k in _COUNTERS:
+        np.testing.assert_allclose(sharded[k], seq[k], rtol=1e-12, atol=0,
+                                   err_msg=f"shard-parallel diverged on {k}")
 
 
 def test_event_counters_are_exact_integers():

@@ -71,6 +71,89 @@ def test_xorshift_period_sanity():
 
 
 # ---------------------------------------------------------------------------
+# CTC invariants (§III-D): LRU ages stay a permutation, disabled ways stay
+# untouched, and the packed hot-loop variant is state-equivalent.
+# ---------------------------------------------------------------------------
+
+_ctc_ops = st.lists(st.tuples(st.integers(0, 40),      # row group
+                              st.integers(0, 7)),      # sector
+                    min_size=1, max_size=40)
+
+
+def _unpack_packed(ps):
+    """Decode the packed int64 CTC state into reference-layout arrays."""
+    ps = np.asarray(ps)
+    return {
+        "tags": (ps >> 40).astype(np.int64) - 1,
+        "age": ((ps >> 32) & 0xFF).astype(np.int64),
+        "svalid": np.stack([((ps >> k) & 1).astype(bool) for k in range(8)],
+                           axis=-1),
+    }
+
+
+@given(st.integers(1, 4).map(lambda k: 2 ** (k - 1)),   # sets: 1,2,4,8
+       st.integers(1, 8), _ctc_ops)
+@settings(max_examples=25, deadline=None)
+def test_ctc_lru_ages_stay_permutation(sets, enabled, ops):
+    """After any probe/fill/touch sequence, the ages of the enabled ways in
+    every set are a permutation of 0..enabled-1 (true LRU needs a total
+    recency order), and disabled ways keep their high init ages."""
+    from repro.core import ctc
+
+    ways = 8
+    state = ctc.init_state(sets, ways, 8)
+    for rg, sector in ops:
+        state, _ = ctc.probe_fill_touch(state, jnp.int32(rg),
+                                        jnp.int32(sector), enabled, sets)
+    age = np.asarray(state["age"])
+    for s in range(sets):
+        assert sorted(age[s, :enabled].tolist()) == list(range(enabled)), (
+            f"set {s}: enabled ages {age[s, :enabled]} not a permutation")
+        assert age[s, enabled:].tolist() == list(range(enabled, ways)), (
+            f"set {s}: disabled ages changed: {age[s, enabled:]}")
+
+
+@given(st.integers(1, 4).map(lambda k: 2 ** (k - 1)),
+       st.integers(1, 8), _ctc_ops)
+@settings(max_examples=25, deadline=None)
+def test_ctc_disabled_ways_never_allocated(sets, enabled, ops):
+    """Ways beyond the enabled count must never receive a tag or a valid
+    sector, whatever the access sequence."""
+    from repro.core import ctc
+
+    ways = 8
+    state = ctc.init_state(sets, ways, 8)
+    for rg, sector in ops:
+        state, _ = ctc.probe_fill_touch(state, jnp.int32(rg),
+                                        jnp.int32(sector), enabled, sets)
+    assert np.all(np.asarray(state["tags"])[:, enabled:] == -1)
+    assert not np.asarray(state["svalid"])[:, enabled:, :].any()
+
+
+@given(st.integers(1, 4).map(lambda k: 2 ** (k - 1)),
+       st.integers(1, 8), _ctc_ops)
+@settings(max_examples=25, deadline=None)
+def test_ctc_packed_variant_matches_reference_layout(sets, enabled, ops):
+    """The simulator's packed int64 CTC (one gather/scatter/argmax per
+    access) must track the reference probe_fill_touch state bit-for-bit."""
+    from repro.core import ctc
+
+    ways = 8
+    state = ctc.init_state(sets, ways, 8)
+    pstate = ctc.packed_init(sets, ways, 8)
+    for rg, sector in ops:
+        state, hit = ctc.probe_fill_touch(state, jnp.int32(rg),
+                                          jnp.int32(sector), enabled, sets)
+        pstate, phit = ctc.probe_fill_touch_packed(
+            pstate, jnp.int32(rg), jnp.int32(sector), enabled, sets)
+        assert bool(hit) == bool(phit)
+    dec = _unpack_packed(pstate)
+    np.testing.assert_array_equal(np.asarray(state["tags"]), dec["tags"])
+    np.testing.assert_array_equal(np.asarray(state["age"]), dec["age"])
+    np.testing.assert_array_equal(np.asarray(state["svalid"]), dec["svalid"])
+
+
+# ---------------------------------------------------------------------------
 # Simulator conservation laws.
 # ---------------------------------------------------------------------------
 
