@@ -64,6 +64,33 @@ def sim_many(workload: str, cfg_kws):
     return [_result_cache[_key(workload, kw)] for kw in cfg_kws]
 
 
+def host_metadata() -> Dict[str, object]:
+    """Host descriptor embedded in benchmark JSON artifacts so wall-clock
+    numbers (and the shard cost model behind them) are comparable across
+    machines: CPU count, platform, JAX version, and the measured
+    ``_STEP_COST_*`` constants + shard cap the engine selected shards with."""
+    import platform
+
+    import jax
+
+    from repro.core import simulator as sim_mod
+
+    return {
+        "cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "step_cost_solo": sim_mod._STEP_COST_SOLO,
+        "step_cost_overhead": sim_mod._STEP_OVERHEAD,
+        "step_cost_lane": sim_mod._LANE_COST,
+        "max_shards": sim_mod._MAX_SHARDS,
+        "env_repro_shards": os.environ.get("REPRO_SHARDS"),
+        "env_repro_bench_n": os.environ.get("REPRO_BENCH_N"),
+    }
+
+
 def emit(rows: List[tuple]):
     """rows: (name, us_per_call, derived) — the run.py CSV contract."""
     for name, us, derived in rows:

@@ -340,9 +340,11 @@ def sweep_design_space(results: Dict) -> List[tuple]:
                      f"|shard_speedup={detail[w]['single_shard_speedup']:.1f}x"))
     results["sweep"] = detail
 
+    from .common import host_metadata
+
     art = os.path.join(os.path.dirname(__file__), "artifacts")
     os.makedirs(art, exist_ok=True)
     with open(os.path.join(art, "BENCH_sweep.json"), "w") as f:
         json.dump({"n": bench_n(), "grid_points": len(grid),
-                   "workloads": detail}, f, indent=1)
+                   "host": host_metadata(), "workloads": detail}, f, indent=1)
     return rows

@@ -16,7 +16,7 @@ import time
 
 
 def main() -> None:
-    from . import figures, kernel_bench, roofline
+    from . import figures, kernel_bench, roofline, scenarios
     from .common import emit
 
     suites = {
@@ -31,6 +31,7 @@ def main() -> None:
         "fig20": figures.fig20_throttle,
         "prior": figures.prior_traffic,
         "sweep": figures.sweep_design_space,
+        "scenarios": scenarios.run,
         "kernels": kernel_bench.run,
         "roofline": roofline.run,
     }

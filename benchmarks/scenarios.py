@@ -1,0 +1,167 @@
+"""Scenario benchmark suite: footprint-oversubscription sweeps with
+per-phase counter attribution.
+
+For every registered scenario the suite holds the memory system at the
+oversub=1.0 capacity and grows the working set past it (Fig. 2 / Fig. 17
+style): runtime (normalized to infinite HBM on the same trace) and hit rate
+as functions of the oversubscription factor, plus the per-phase breakdown at
+the nominal point — the numbers that show *why* phase-heterogeneous traffic
+behaves differently from any single-pattern loop.
+
+Writes ``benchmarks/artifacts/BENCH_scenarios.json`` (host metadata
+included, for cross-host comparability) and, when matplotlib is available,
+curve/bar figures under ``benchmarks/artifacts/figs/``.
+
+    PYTHONPATH=src python -m benchmarks.run scenarios
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+from .common import bench_n, host_metadata
+
+OVERSUB_GRID = (0.5, 1.0, 2.0, 4.0)
+
+# Fixed categorical series order for the figures (colorblind-validated
+# palette; see the dataviz palette reference — slot order is meaningful and
+# must not be cycled or re-ranked per chart).
+_SERIES_COLORS = ("#2a78d6", "#eb6834", "#1baf7a", "#eda100",
+                  "#e87ba4", "#008300")
+
+
+def _figures(detail: Dict, art: str) -> List[str]:
+    """Render the sweep curves + per-phase bars; returns written paths.
+    Import-gated: artifact JSON is the contract, figures are a bonus."""
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except Exception:
+        return []
+
+    figs_dir = os.path.join(art, "figs")
+    os.makedirs(figs_dir, exist_ok=True)
+    written = []
+
+    def style(ax):
+        ax.grid(True, axis="y", color="#e5e4df", linewidth=0.8, zorder=0)
+        for side in ("top", "right"):
+            ax.spines[side].set_visible(False)
+        for side in ("left", "bottom"):
+            ax.spines[side].set_color("#c3c2b7")
+        ax.tick_params(colors="#5f5e56", labelsize=9)
+
+    # Oversubscription curves: one line per scenario, one axis, runtime
+    # normalized to InfHBM on the same trace.
+    fig, ax = plt.subplots(figsize=(6.4, 4.0), dpi=150)
+    style(ax)
+    for i, (name, d) in enumerate(sorted(detail.items())):
+        xs = [p["oversub"] for p in d["sweep"]]
+        ys = [p["runtime_rel_inf"] for p in d["sweep"]]
+        color = _SERIES_COLORS[i % len(_SERIES_COLORS)]
+        ax.plot(xs, ys, color=color, linewidth=2, marker="o",
+                markersize=4, label=name, zorder=3)
+    ax.set_yscale("log")
+    ax.set_xlabel("footprint oversubscription (x nominal capacity)",
+                  color="#3d3d38")
+    ax.set_ylabel("HMS runtime / InfHBM (log)", color="#3d3d38")
+    ax.set_title("Scenario oversubscription sweep", color="#1a1a19",
+                 fontsize=11, loc="left")
+    ax.legend(frameon=False, fontsize=9)
+    path = os.path.join(figs_dir, "scenarios_oversub.png")
+    fig.tight_layout()
+    fig.savefig(path)
+    plt.close(fig)
+    written.append(path)
+
+    # Per-phase read hit rate + bypass rate at the nominal point: small
+    # multiples (one panel per scenario) sharing one y scale; the two
+    # measures keep their series color across panels.
+    names = sorted(detail)
+    fig, axes = plt.subplots(1, len(names), figsize=(3.2 * len(names), 3.4),
+                             dpi=150, sharey=True)
+    for ax, name in zip(axes, names):
+        style(ax)
+        phases = detail[name]["phases"]
+        labels = list(phases)
+        hit = [phases[p]["hit_rate_read"] for p in labels]
+        byp = [phases[p]["bypass_rate"] for p in labels]
+        x = range(len(labels))
+        ax.bar([i - 0.2 for i in x], hit, width=0.36,
+               color=_SERIES_COLORS[0], zorder=3, label="read hit rate")
+        ax.bar([i + 0.2 for i in x], byp, width=0.36,
+               color=_SERIES_COLORS[1], zorder=3, label="bypass rate")
+        ax.set_xticks(list(x))
+        ax.set_xticklabels(labels, rotation=45, ha="right", fontsize=8)
+        ax.set_title(name, fontsize=10, color="#1a1a19", loc="left")
+        ax.set_ylim(0, 1.0)
+    axes[0].set_ylabel("rate", color="#3d3d38")
+    axes[0].legend(frameon=False, fontsize=8)
+    path = os.path.join(figs_dir, "scenarios_phases.png")
+    fig.tight_layout()
+    fig.savefig(path)
+    plt.close(fig)
+    written.append(path)
+    return written
+
+
+def run(results: Dict) -> List[tuple]:
+    from repro.core import HMSConfig, simulate_many
+    from repro.workloads import SCENARIOS
+
+    n = bench_n()
+    rows = []
+    detail = {}
+    for name, scn in sorted(SCENARIOS.items()):
+        base = scn.compile(n=n)
+        cfg_fp = base.footprint          # memory system pinned at oversub=1
+        sweep = []
+        phases = None
+        t0 = time.time()
+        for ov in OVERSUB_GRID:
+            t = base if ov == 1.0 else scn.compile(n=n, oversub=ov)
+            hms, inf = simulate_many(t, [
+                HMSConfig(footprint=cfg_fp),
+                HMSConfig(footprint=cfg_fp, organization="inf_hbm"),
+            ])
+            sweep.append({
+                "oversub": ov,
+                "footprint_bytes": t.footprint,
+                "runtime_rel_inf": hms.runtime_cycles / inf.runtime_cycles,
+                "hit_rate_read": hms.hit_rate_read,
+                "hit_rate_write": hms.hit_rate_write,
+                "total_traffic_rel_inf": hms.total_traffic
+                / max(1.0, inf.total_traffic),
+            })
+            if ov == 1.0:
+                phases = hms.phase_summary()
+        wall = time.time() - t0
+        detail[name] = {
+            "n": n,
+            "footprint_bytes": cfg_fp,
+            "phase_names": list(base.phase_names),
+            "sweep": sweep,
+            "phases": phases,
+            "wall_s": wall,
+        }
+        nominal = next(p for p in sweep if p["oversub"] == 1.0)
+        worst = max(sweep, key=lambda p: p["oversub"])
+        rows.append((f"scenarios.{name}", wall / len(OVERSUB_GRID) * 1e6,
+                     f"phases={len(base.phase_names)}"
+                     f"|rel@1.0={nominal['runtime_rel_inf']:.2f}"
+                     f"|rel@{worst['oversub']}={worst['runtime_rel_inf']:.2f}"
+                     f"|hitR@1.0={nominal['hit_rate_read']:.2f}"))
+    results["scenarios"] = detail
+
+    art = os.path.join(os.path.dirname(__file__), "artifacts")
+    os.makedirs(art, exist_ok=True)
+    figs = _figures(detail, art)
+    with open(os.path.join(art, "BENCH_scenarios.json"), "w") as f:
+        json.dump({"n": n, "oversub_grid": list(OVERSUB_GRID),
+                   "host": host_metadata(), "figures": figs,
+                   "scenarios": detail}, f, indent=1)
+    return rows

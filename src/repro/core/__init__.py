@@ -18,6 +18,11 @@ from .timing import (
 from .traces import WORKLOADS, Trace, make_trace, preprocess
 from .simulator import SimResult, run_workload, simulate, simulate_many
 
+# Populate the WORKLOADS registry with the phase-structured scenarios
+# (repro.workloads appends to it on import; safe against the partial
+# circular import because .traces is fully initialized above).
+from repro import workloads as _workloads  # noqa: E402,F401
+
 __all__ = [
     "COLUMN_BYTES", "COLUMNS_PER_ROW", "ROW_BYTES",
     "DeviceTiming", "EnergyParams", "HMSConfig",

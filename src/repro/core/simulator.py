@@ -122,10 +122,48 @@ class SimResult:
     bypass_l1_frac: float             # fraction of bypasses decided at level 1
     energy_pj: Dict[str, float]
     power_w: float
+    # Phase attribution (scenario traces): counters[k] ==
+    # float(np.sum(phase_counters[k])) bit-for-bit, because the totals are
+    # *computed* as that sum.  Empty/None for unphased traces.
+    phase_names: tuple = ()
+    phase_counters: Dict[str, np.ndarray] | None = None
 
     @property
     def total_traffic(self) -> float:
         return float(sum(self.traffic_bytes.values()))
+
+    def phase_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-phase derived metrics: request count, hit rates, bypass rate,
+        CTC hit rate, and DRAM/SCM bus traffic in bytes."""
+        if not self.phase_counters:
+            return {}
+        out: Dict[str, Dict[str, float]] = {}
+        for i, name in enumerate(self.phase_names):
+            c = {k: float(v[i]) for k, v in self.phase_counters.items()}
+            dram_cols, scm_cols = _bus_cols(c)
+            tot_r = c["hit_r"] + c["miss_r"]
+            tot_w = c["hit_w"] + c["miss_w"]
+            tot_ctc = c["ctc_hit"] + c["ctc_miss"]
+            misses = c["miss_r"] + c["miss_w"]
+            # single-tier organizations track no hit/miss events; every
+            # request is exactly one demand access there
+            requests = tot_r + tot_w
+            if requests == 0.0:
+                requests = (c["demand_dram_rd"] + c["demand_dram_wr"]
+                            + c["demand_scm_rd"] + c["demand_scm_wr"])
+            out[name] = {
+                "requests": requests,
+                "hit_rate_read": c["hit_r"] / tot_r if tot_r else 0.0,
+                "hit_rate_write": c["hit_w"] / tot_w if tot_w else 0.0,
+                "bypass_rate": (c["bypass_l1"] + c["bypass_l2"]) / misses
+                if misses else 0.0,
+                "ctc_hit_rate": c["ctc_hit"] / tot_ctc if tot_ctc else 1.0,
+                "fills": c["fills"],
+                "dram_bytes": dram_cols * COLUMN_BYTES,
+                "scm_bytes": scm_cols * COLUMN_BYTES,
+                "scm_write_cols": c["demand_scm_wr"] + c["wb_scm_wr"],
+            }
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -149,6 +187,7 @@ class _EngineKey:
     ctc_sets_alloc: int     # per-shard CTC set allocation (bucketed)
     ctc_ways_alloc: int
     ctc_sectors: int
+    phases: int = 1         # counter segments (scenario phase count)
 
 
 _USES_CTC = POLICIES_WITH_CTC
@@ -297,7 +336,7 @@ def _engine_inputs(trace: Trace, cfg: HMSConfig, pre,
     if plan["depth"] < depth:           # pad to the engine's (group) depth
         pad = np.full((shards, depth - plan["depth"]), trace.n, np.int32)
         pos = np.concatenate([pos, pad], axis=1)
-    return {
+    out = {
         "slot": plan["slot_local"],
         "tag": pre["tag"],
         "is_write": pre["is_write"],
@@ -313,6 +352,9 @@ def _engine_inputs(trace: Trace, cfg: HMSConfig, pre,
         "dice": _dice(trace.n),
         "pos": pos,
     }
+    if trace.n_phases > 1:
+        out["phase"] = trace.phase_id
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -517,10 +559,23 @@ def _make_engine(key: _EngineKey):
         wb = ys["wb"]
         nar = ys["need_aff_read"]
 
-        C = {k: jnp.zeros((), jnp.float64) for k in _COUNTERS}
+        # Phased traces reduce every counter per phase (segment-sum over the
+        # trace-order phase_id); the whole-trace totals are then *defined* as
+        # the sum of the per-phase vector, so phase attribution is exact by
+        # construction.  Unphased traces keep the scalar reduction.
+        n_ph = key.phases
+        if n_ph > 1:
+            phase = jnp.asarray(xs["phase"])
+            C = {k: jnp.zeros((n_ph,), jnp.float64) for k in _COUNTERS}
 
-        def add(name, v):
-            C[name] = C[name] + jnp.sum(jnp.asarray(v, jnp.float64))
+            def add(name, v):
+                C[name] = C[name] + jax.ops.segment_sum(
+                    jnp.asarray(v, jnp.float64), phase, num_segments=n_ph)
+        else:
+            C = {k: jnp.zeros((), jnp.float64) for k in _COUNTERS}
+
+            def add(name, v):
+                C[name] = C[name] + jnp.sum(jnp.asarray(v, jnp.float64))
 
         probe_cost = p["probe_cost"]
         if use_ctc:
@@ -643,6 +698,7 @@ def group_engine_key(trace: Trace, configs: Sequence[HMSConfig]) -> _EngineKey:
         ctc_ways_alloc=_bucket(max(c.ctc_ways for c in cfgs))
         if use_ctc else 1,
         ctc_sectors=sectors.pop(),
+        phases=trace.n_phases,
     )
 
 
@@ -691,41 +747,54 @@ def _local_sets(trace: Trace, cfg: HMSConfig, key: _EngineKey) -> int:
 
 
 def _run_hms_scan(trace: Trace, cfg: HMSConfig, pre,
-                  key: _EngineKey | None = None) -> Dict[str, float]:
+                  key: _EngineKey | None = None) -> Dict[str, np.ndarray]:
     if key is None:
         key = _engine_key(trace, cfg)
     fn = _engine_for(key)
     C = fn(_engine_inputs(trace, cfg, pre, key.shards, key.depth),
            _runtime_params(cfg, _local_sets(trace, cfg, key)))
-    return {k: float(v) for k, v in C.items()}
+    # scalar (unphased) or (n_phases,) vector (phased) per counter
+    return {k: np.asarray(v, np.float64) for k, v in C.items()}
 
 
 # ---------------------------------------------------------------------------
 # Vectorized single-tier models (InfHBM / SCM-only).
 # ---------------------------------------------------------------------------
 
-def _single_tier_counters(trace: Trace, cfg: HMSConfig, device) -> Dict[str, float]:
+def _single_tier_counters(trace: Trace, cfg: HMSConfig, device):
     pre = preprocess(trace, cfg)
     ncols = pre["run_ncols"]
     is_write = pre["is_write"]
     share = (device.rcd + device.rp) / ncols + np.where(
         is_write, device.wr / ncols, 0.0
     )
-    busy = float(np.sum(1.0 + share))
-    acts = float(np.sum(1.0 / ncols))
-    C = {k: 0.0 for k in _COUNTERS}
+    n_ph = trace.n_phases
+    if n_ph > 1:
+        # per-phase attribution; totals become sums of these vectors.
+        # Fresh zero array per counter — these land in the public
+        # SimResult.phase_counters, where aliased buffers would let an
+        # in-place consumer update corrupt sibling counters.
+        def red(w):
+            return np.bincount(trace.phase_id,
+                               weights=np.asarray(w, np.float64),
+                               minlength=n_ph)
+        C = {k: np.zeros(n_ph, np.float64) for k in _COUNTERS}
+    else:
+        def red(w):
+            return float(np.sum(np.asarray(w, np.float64)))
+        C = {k: 0.0 for k in _COUNTERS}
     is_dram = device.kind == "dram"
-    C["demand_dram_rd" if is_dram else "demand_scm_rd"] = float(
-        np.sum(~is_write))
-    C["demand_dram_wr" if is_dram else "demand_scm_wr"] = float(
-        np.sum(is_write))
+    C["demand_dram_rd" if is_dram else "demand_scm_rd"] = red(~is_write)
+    C["demand_dram_wr" if is_dram else "demand_scm_wr"] = red(is_write)
+    busy = red(1.0 + share)
+    acts = red(1.0 / ncols)
     if is_dram:
         C["dram_busy"] = busy
         C["dram_acts"] = acts
     else:
         C["scm_busy"] = busy
         C["scm_acts"] = acts
-        C["scm_wr_acts"] = float(np.sum(is_write / ncols))
+        C["scm_wr_acts"] = red(is_write / ncols)
     return C
 
 
@@ -865,7 +934,23 @@ def _energy(C: Dict[str, float], cfg: HMSConfig, link_bytes: float):
 
 
 def _finish(name, cfg, C, link_bytes=0.0, fault_cycles=0.0,
-            n_requests=1) -> SimResult:
+            n_requests=1, phase_names=()) -> SimResult:
+    # Split phased counters: per-phase vectors are kept verbatim and the
+    # whole-trace totals are their sums (so per-phase attribution is exact
+    # bit-for-bit by construction — np.sum over the same float64 vector is
+    # deterministic).
+    phase_counters = None
+    totals: Dict[str, float] = {}
+    for k, v in C.items():
+        a = np.asarray(v, np.float64)
+        if a.ndim:
+            if phase_counters is None:
+                phase_counters = {}
+            phase_counters[k] = a
+            totals[k] = float(np.sum(a))
+        else:
+            totals[k] = float(a)
+    C = totals
     dram_cols, scm_cols = _bus_cols(C)
     banks = cfg.channels * cfg.banks_per_channel
     if cfg.organization == "separate":
@@ -918,6 +1003,8 @@ def _finish(name, cfg, C, link_bytes=0.0, fault_cycles=0.0,
         bypass_l1_frac=float(C["bypass_l1"] / tot_byp) if tot_byp else 0.0,
         energy_pj={k: float(v) for k, v in energy.items()},
         power_w=float(power),
+        phase_names=tuple(phase_names) if phase_counters else (),
+        phase_counters=phase_counters,
     )
 
 
@@ -929,15 +1016,21 @@ def _finish_hms(trace: Trace, cfg: HMSConfig, C: Dict[str, float],
     if trace.footprint > cfg.scm_capacity + cfg.dram_cache_capacity:
         # HMS itself oversubscribed (Fig. 17's rel-footprint 4.0 case):
         # UM faults against the *SCM* capacity on top of the cache model.
+        # The UM model sizes frames as footprint * r_hbm, so footprint must
+        # be the TRACE's (cfg.footprint may be pinned at a nominal size —
+        # the scenario oversubscription sweep does exactly that) for the
+        # ratio to cancel and the resident bytes to equal the HMS capacity.
         big = dataclasses.replace(
-            cfg, r_hbm=(cfg.scm_capacity + cfg.dram_cache_capacity)
+            cfg, footprint=trace.footprint,
+            r_hbm=(cfg.scm_capacity + cfg.dram_cache_capacity)
             / trace.footprint)
         faults, mig, wb, remote = _run_um(trace, big, nvlink=nvlink)
         link_bytes = (mig + wb) * UM_PAGE_BYTES + remote * COLUMN_BYTES
         fault_cycles = (0.0 if nvlink
                         else faults * cfg.fault_latency_ns / cfg.fault_overlap)
     return _finish(trace.name, cfg, C, link_bytes=link_bytes,
-                   fault_cycles=fault_cycles, n_requests=trace.n)
+                   fault_cycles=fault_cycles, n_requests=trace.n,
+                   phase_names=trace.phase_names)
 
 
 # ---------------------------------------------------------------------------
@@ -951,11 +1044,13 @@ def simulate(trace: Trace, cfg: HMSConfig, nvlink: bool = False) -> SimResult:
 
     if org == "inf_hbm":
         C = _single_tier_counters(trace, cfg, cfg.dram_timing)
-        return _finish(trace.name, cfg, C, n_requests=trace.n)
+        return _finish(trace.name, cfg, C, n_requests=trace.n,
+                       phase_names=trace.phase_names)
 
     if org == "scm":
         C = _single_tier_counters(trace, cfg, cfg.scm_timing)
-        return _finish(trace.name, cfg, C, n_requests=trace.n)
+        return _finish(trace.name, cfg, C, n_requests=trace.n,
+                       phase_names=trace.phase_names)
 
     if org == "hbm":
         # Oversubscribed HBM + UM over the host link.
@@ -965,7 +1060,8 @@ def simulate(trace: Trace, cfg: HMSConfig, nvlink: bool = False) -> SimResult:
         fault_cycles = (0.0 if nvlink
                         else faults * cfg.fault_latency_ns / cfg.fault_overlap)
         return _finish(trace.name, cfg, C, link_bytes=link_bytes,
-                       fault_cycles=fault_cycles, n_requests=trace.n)
+                       fault_cycles=fault_cycles, n_requests=trace.n,
+                       phase_names=trace.phase_names)
 
     # hms / separate
     pre = preprocess(trace, cfg)
@@ -1016,7 +1112,7 @@ def simulate_many(trace: Trace, configs: Sequence[HMSConfig],
         fn = _batched_engine_for(key)
         Cs = fn(xs, params)
         for j, i in enumerate(idxs):
-            C = {k: float(v[j]) for k, v in Cs.items()}
+            C = {k: np.asarray(v[j], np.float64) for k, v in Cs.items()}
             results[i] = _finish_hms(trace, configs[i], C, nvlink)
 
     return results

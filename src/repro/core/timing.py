@@ -67,6 +67,11 @@ SCM_TLC = DeviceTiming(cl=14, rcd=250, ras=250, wr=2350, rp=14, kind="scm")
 
 SCM_MODES = {"slc": SCM_SLC, "mlc": SCM_MLC, "tlc": SCM_TLC}
 
+# Capacity of the same SCM dies in each cell mode, relative to the MLC
+# baseline the geometry model (``HMSConfig.scm_capacity``) is sized for:
+# SLC stores 1 bit/cell (half of MLC's 2), TLC 3 (1.5x).
+SCM_MODE_CAPACITY_VS_MLC = {"slc": 0.5, "mlc": 1.0, "tlc": 1.5}
+
 
 # Policies whose engine carries CTC state through the scan.  Shared single
 # source of truth for the simulator's engine branching and the trace shard
@@ -110,6 +115,8 @@ class HMSConfig:
       scm          - SCM-only stack
       inf_hbm      - infinite-capacity HBM (never oversubscribed)
     ``tag_layout``: amil | tad  (§III-B / Fig. 7)
+    ``scm_mode``: slc | mlc | tlc, or "auto" to footprint-adapt (§III-E):
+      the fastest cell mode whose capacity still holds the footprint.
     """
 
     # Capacities, bytes.  ``footprint`` is the workload footprint; the memory
@@ -174,8 +181,29 @@ class HMSConfig:
         return DRAM
 
     @property
+    def _scm_capacity_mlc(self) -> int:
+        """SCM capacity of the dies at the MLC (2 bit/cell) baseline the
+        geometry model is sized for; the mode-aware :attr:`scm_capacity`
+        scales it by the effective cell mode's density."""
+        return int(self.hbm_capacity * (1.0 - self.dram_ratio) * 4.0)
+
+    @property
+    def effective_scm_mode(self) -> str:
+        """Resolve ``scm_mode="auto"`` by footprint adaptation (§III-E): run
+        the SCM in the fastest cell mode whose capacity still holds the
+        workload footprint — SLC if it fits at half the MLC capacity, MLC if
+        it fits at the nominal capacity, else TLC for the extra density."""
+        if self.scm_mode != "auto":
+            return self.scm_mode
+        for mode in ("slc", "mlc"):
+            cap = int(self._scm_capacity_mlc * SCM_MODE_CAPACITY_VS_MLC[mode])
+            if self.footprint <= cap:
+                return mode
+        return "tlc"
+
+    @property
     def scm_timing(self) -> DeviceTiming:
-        base = SCM_MODES[self.scm_mode]
+        base = SCM_MODES[self.effective_scm_mode]
         rcd = base.rcd * (2 if self.throttle_act else 1)
         wr = base.wr * (2 if self.throttle_wr else 1)
         return dataclasses.replace(base, rcd=rcd, wr=wr)
@@ -191,7 +219,12 @@ class HMSConfig:
 
     @property
     def scm_capacity(self) -> int:
-        return int(self.hbm_capacity * (1.0 - self.dram_ratio) * 4.0)
+        """Capacity in the *effective* cell mode: the same dies hold half
+        the MLC bytes in SLC mode and 1.5x in TLC (§III-E's tradeoff — the
+        mode that sets the timings also sets the capacity, so the
+        UM-overflow check and footprint adaptation stay consistent)."""
+        return int(self._scm_capacity_mlc
+                   * SCM_MODE_CAPACITY_VS_MLC[self.effective_scm_mode])
 
     @property
     def num_lines(self) -> int:
@@ -240,7 +273,7 @@ class HMSConfig:
             "bear", "redcache", "mccache", "always_cache",
         )
         assert self.tag_layout in ("amil", "tad")
-        assert self.scm_mode in SCM_MODES
+        assert self.scm_mode == "auto" or self.scm_mode in SCM_MODES
         assert self.line_bytes in (64, 128, 256, 512, 1024)
         assert ROW_BYTES % self.line_bytes == 0
         return self

@@ -21,8 +21,10 @@ write-presence feed Eq. 1.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import inspect
 import weakref
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,6 +42,11 @@ class Trace:
     col: np.ndarray        # int64 global column index
     is_write: np.ndarray   # bool
     footprint: int         # bytes
+    # Phase attribution (scenario traces): phase_id[i] indexes phase_names
+    # for request i.  Homogeneous traces leave both unset and behave as one
+    # anonymous phase throughout the engine.
+    phase_id: Optional[np.ndarray] = None       # int32, or None
+    phase_names: Tuple[str, ...] = ()
 
     def __post_init__(self):
         assert self.col.ndim == 1 and self.col.shape == self.is_write.shape
@@ -47,10 +54,20 @@ class Trace:
         assert int(self.col.max(initial=0)) < limit, (
             f"trace {self.name} exceeds footprint"
         )
+        if self.phase_id is not None:
+            assert self.phase_id.shape == self.col.shape
+            assert self.phase_names, "phased trace needs phase_names"
+            assert int(self.phase_id.max(initial=0)) < len(self.phase_names)
+            self.phase_id = self.phase_id.astype(np.int32)
 
     @property
     def n(self) -> int:
         return int(self.col.shape[0])
+
+    @property
+    def n_phases(self) -> int:
+        """Phase count the engine attributes counters over (1 if unphased)."""
+        return len(self.phase_names) if self.phase_id is not None else 1
 
 
 # ---------------------------------------------------------------------------
@@ -59,6 +76,32 @@ class Trace:
 
 def _cols(footprint):
     return footprint // COLUMN_BYTES
+
+
+def split_exact(n: int, k: int) -> np.ndarray:
+    """Split ``n`` into ``k`` near-even integer parts summing to exactly
+    ``n`` (the first ``n % k`` parts get the extra request)."""
+    base, rem = divmod(n, k)
+    out = np.full(k, base, dtype=np.int64)
+    out[:rem] += 1
+    return out
+
+
+def split_weighted(n: int, weights: Sequence[float]) -> np.ndarray:
+    """Largest-remainder apportionment of ``n`` requests over ``weights``:
+    parts sum to exactly ``n`` and track the weight ratios as closely as an
+    integer split can.  Generators use this instead of per-part ``//``
+    arithmetic, which silently under- (or over-) shoots the requested n."""
+    w = np.asarray(weights, dtype=np.float64)
+    exact = n * w / w.sum()
+    out = np.floor(exact).astype(np.int64)
+    rem = n - int(out.sum())
+    if rem:
+        frac = exact - out
+        # ties break on index so the split is deterministic
+        order = np.lexsort((np.arange(w.shape[0]), -frac))
+        out[order[:rem]] += 1
+    return out
 
 
 def gen_streaming_read(footprint=16 * MiB, n=200_000, seed=0, name="stream_r"):
@@ -80,27 +123,29 @@ def gen_stencil(footprint=24 * MiB, n=240_000, seed=0, name="stencil"):
     """
     total = _cols(footprint)
     plane = max(COLUMNS_PER_ROW * 64, total // 64)
-    base = np.arange(n // 4, dtype=np.int64)
+    per = -(-n // 4)
+    base = np.arange(per, dtype=np.int64)
     streams = [
         (base % total, False),
         ((base + plane) % total, False),
         ((base + 2 * plane) % total, False),
         ((base + plane) % total, True),      # center write
     ]
-    col = np.empty(n, dtype=np.int64)
-    wr = np.empty(n, dtype=bool)
+    col = np.empty(4 * per, dtype=np.int64)
+    wr = np.empty(4 * per, dtype=bool)
     for i, (c, w) in enumerate(streams):
-        col[i::4] = c[: n // 4]
+        col[i::4] = c
         wr[i::4] = w
-    return Trace(name, col, wr, footprint)
+    return Trace(name, col[:n], wr[:n], footprint)
 
 
 def gen_pathfinder(footprint=12 * MiB, n=160_000, seed=0, name="pathfnd"):
     """Row-wise dynamic programming: stream row i and i-1, write row i."""
     total = _cols(footprint)
     rowlen = COLUMNS_PER_ROW * 32
-    base = np.arange(n // 3, dtype=np.int64)
-    col = np.empty(n // 3 * 3, dtype=np.int64)
+    per = -(-n // 3)
+    base = np.arange(per, dtype=np.int64)
+    col = np.empty(3 * per, dtype=np.int64)
     wr = np.empty(col.shape[0], dtype=bool)
     col[0::3] = base % total
     wr[0::3] = False
@@ -108,7 +153,7 @@ def gen_pathfinder(footprint=12 * MiB, n=160_000, seed=0, name="pathfnd"):
     wr[1::3] = False
     col[2::3] = (base + rowlen) % total
     wr[2::3] = True
-    return Trace(name, col, wr, footprint)
+    return Trace(name, col[:n], wr[:n], footprint)
 
 
 def _powerlaw_nodes(rng, n_nodes, n, alpha=1.1):
@@ -136,9 +181,10 @@ def gen_bfs(footprint=32 * MiB, n=240_000, seed=0, name="bfs",
     rng = np.random.default_rng(seed)
     total = _cols(footprint)
     n_nodes = total // burst
-    nodes = _powerlaw_nodes(rng, n_nodes, n // burst)
+    nodes = _powerlaw_nodes(rng, n_nodes, -(-n // burst))
     base = nodes * burst
     col = (base[:, None] + np.arange(burst)[None, :]).reshape(-1) % total
+    col = col[:n]
     wr = rng.random(col.shape[0]) < write_frac
     return Trace(name, col.astype(np.int64), wr, footprint)
 
@@ -200,13 +246,13 @@ def gen_bert_layer(footprint=24 * MiB, n=220_000, seed=4, name="bert_inf"):
     w_region = int(total * 0.8)
     a_region = total - w_region
     iters = 6
-    per = n // iters
     chunks = []
-    for it in range(iters):
-        wcols = (np.arange(per * 3 // 4, dtype=np.int64) * max(
-            1, w_region // (per * 3 // 4))) % w_region
-        awr = np.arange(per // 8, dtype=np.int64) % a_region + w_region
-        ard = awr.copy()
+    for m in split_exact(n, iters):
+        nw, na, nr = split_weighted(int(m), (6, 1, 1))
+        wcols = (np.arange(nw, dtype=np.int64)
+                 * max(1, w_region // max(1, nw))) % w_region
+        awr = np.arange(na, dtype=np.int64) % a_region + w_region
+        ard = np.arange(nr, dtype=np.int64) % a_region + w_region
         c = np.concatenate([wcols, awr, ard])
         w = np.concatenate([
             np.zeros(wcols.shape[0], bool),
@@ -226,17 +272,17 @@ def gen_gpt_train(footprint=32 * MiB, n=260_000, seed=5, name="gpt_train"):
     w = int(total * 0.45)          # params
     g = int(total * 0.25)          # grads
     o = total - w - g              # optimizer state
-    per = n // 3
-    fwd = np.arange(per, dtype=np.int64) * max(1, w // per) % w
-    bwd = fwd[::-1].copy()
-    opt_rd = (np.arange(per // 2, dtype=np.int64) * 2) % o + w + g
-    opt_wr = opt_rd.copy()
-    grad_wr = np.arange(per // 2, dtype=np.int64) % g + w
+    nf, nb, ng, nor, now = split_weighted(n, (2, 2, 1, 1, 1))
+    fwd = np.arange(nf, dtype=np.int64) * max(1, w // max(1, nf)) % w
+    bwd = (np.arange(nb, dtype=np.int64) * max(1, w // max(1, nb)) % w)[::-1]
+    opt_rd = (np.arange(nor, dtype=np.int64) * 2) % o + w + g
+    opt_wr = (np.arange(now, dtype=np.int64) * 2) % o + w + g
+    grad_wr = np.arange(ng, dtype=np.int64) % g + w
     col = np.concatenate([fwd, bwd, grad_wr, opt_rd, opt_wr])
     wr = np.concatenate([
-        np.zeros(per, bool), np.zeros(per, bool),
-        np.ones(per // 2, bool), np.zeros(per // 2, bool),
-        np.ones(per // 2, bool),
+        np.zeros(nf, bool), np.zeros(nb, bool),
+        np.ones(ng, bool), np.zeros(nor, bool),
+        np.ones(now, bool),
     ])
     return Trace(name, col, wr, footprint)
 
@@ -249,14 +295,14 @@ def gen_llm_decode(footprint=24 * MiB, n=220_000, seed=6, name="llm_dec"):
     w = int(total * 0.7)
     kv = total - w
     toks = 24
-    per = n // toks
     chunks = []
-    for t in range(toks):
-        wcols = (np.arange(per * 5 // 8, dtype=np.int64)
-                 * max(1, w // (per * 5 // 8))) % w
+    for t, m in enumerate(split_exact(n, toks)):
+        nw, nkr, nkw = split_weighted(int(m), (5, 2, 1))
+        wcols = (np.arange(nw, dtype=np.int64)
+                 * max(1, w // max(1, nw))) % w
         kv_len = max(16, int(kv * (t + 1) / toks))
-        kvr = rng.integers(0, kv_len, size=per // 4).astype(np.int64) + w
-        kvw = (np.arange(per // 8, dtype=np.int64) % kv) + w
+        kvr = rng.integers(0, kv_len, size=nkr).astype(np.int64) + w
+        kvw = (np.arange(nkw, dtype=np.int64) % kv) + w
         c = np.concatenate([wcols, kvr, kvw])
         wmask = np.concatenate([
             np.zeros(wcols.shape[0], bool),
@@ -269,13 +315,15 @@ def gen_llm_decode(footprint=24 * MiB, n=220_000, seed=6, name="llm_dec"):
     return Trace(name, col, wr, footprint)
 
 
+# Partials (not lambdas) so generator signatures — in particular the default
+# footprint — stay introspectable for make_trace's scaling path.
 WORKLOADS: Dict[str, Callable[..., Trace]] = {
     "stream_r": gen_streaming_read,
     "stencil": gen_stencil,
     "pathfnd": gen_pathfinder,
-    "bfs_tu": lambda **kw: gen_bfs(name="bfs_tu", seed=10, **kw),
-    "bfs_ta": lambda **kw: gen_bfs(name="bfs_ta", seed=11, burst=8, **kw),
-    "sssp_ttc": lambda **kw: gen_sssp(name="sssp_ttc", seed=12, **kw),
+    "bfs_tu": functools.partial(gen_bfs, name="bfs_tu", seed=10),
+    "bfs_ta": functools.partial(gen_bfs, name="bfs_ta", seed=11, burst=8),
+    "sssp_ttc": functools.partial(gen_sssp, name="sssp_ttc", seed=12),
     "kcore": gen_kcore,
     "clr": gen_color,
     "zipf": gen_zipf_mixed,
@@ -285,17 +333,25 @@ WORKLOADS: Dict[str, Callable[..., Trace]] = {
 }
 
 
+def workload_default_footprint(gen: Callable[..., Trace]) -> int:
+    """Default footprint of a registered generator, read off its signature
+    (so scaled ``make_trace`` calls never generate a throwaway trace just to
+    learn the footprint)."""
+    param = inspect.signature(gen).parameters.get("footprint")
+    assert param is not None and param.default is not inspect.Parameter.empty, (
+        "workload generators must expose a defaulted 'footprint' kwarg")
+    return int(param.default)
+
+
 def make_trace(name: str, scale: float = 1.0, n: int | None = None) -> Trace:
     gen = WORKLOADS[name]
     kw = {}
     if n is not None:
         kw["n"] = n
-    t = gen(**kw)
     if scale != 1.0:
-        fp = int(t.footprint * scale)
+        fp = int(workload_default_footprint(gen) * scale)
         kw["footprint"] = max(2 * MiB, fp)
-        t = gen(**kw)
-    return t
+    return gen(**kw)
 
 
 # ---------------------------------------------------------------------------

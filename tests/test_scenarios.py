@@ -1,0 +1,299 @@
+"""Scenario subsystem tests: phase IR, registry integration, and exact
+per-phase counter attribution.
+
+The acceptance bar for the subsystem: every registered scenario compiles
+through ``make_trace``, runs through ``simulate_many`` unchanged, and
+reports per-phase counters whose per-phase sums equal the whole-trace
+counters exactly (float64 bit-for-bit) for all 8 policies.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import HMSConfig, make_trace, simulate, simulate_many
+from repro.core.simulator import (_COUNTERS, set_forced_shards,
+                                  set_max_shards)
+from repro.core.traces import WORKLOADS, split_weighted
+from repro.workloads import SCENARIOS, Phase, Scenario
+
+ALL_POLICIES = ("hms", "no_bypass", "no_bypass_no_ctc", "no_second_level",
+                "bear", "redcache", "mccache", "always_cache")
+
+N = 12_000
+
+
+# ---------------------------------------------------------------------------
+# IR / compile mechanics.
+# ---------------------------------------------------------------------------
+
+def test_scenario_registry_reaches_make_trace():
+    """Every library scenario is a WORKLOADS citizen: ``make_trace`` builds
+    it with an exact request count and a phase tag per request."""
+    assert len(SCENARIOS) >= 4
+    for name in SCENARIOS:
+        assert name in WORKLOADS
+        t = make_trace(name, n=10_001)
+        assert t.n == 10_001
+        assert t.phase_id is not None and t.phase_id.shape == (t.n,)
+        assert t.n_phases == len(t.phase_names) >= 3
+        assert int(t.phase_id.max()) == t.n_phases - 1
+        # every phase received requests
+        assert np.bincount(t.phase_id, minlength=t.n_phases).min() > 0
+
+
+def test_phase_request_split_follows_weights():
+    t = SCENARIOS["llm_serve"].compile(n=9000)
+    counts = np.bincount(t.phase_id, minlength=t.n_phases)
+    weights = np.array([p.weight for p in SCENARIOS["llm_serve"].phases])
+    expect = split_weighted(9000, weights)
+    np.testing.assert_array_equal(counts, expect)
+
+
+def test_interleave_merges_sequenced_phases_stay_ordered():
+    """Phases in one interleave group blend; sequenced phases do not
+    overlap at all (their phase_id spans are disjoint intervals)."""
+    scn = Scenario(
+        name="t", regions={"a": 0.5, "b": 0.5},
+        phases=(Phase("p0", "a", "stream"),
+                Phase("p1", "a", "random", interleave="g"),
+                Phase("p2", "b", "random", interleave="g"),
+                Phase("p3", "b", "stream")))
+    t = scn.compile(n=8000, footprint=8 * 2**20)
+    pid = t.phase_id
+    # p0 strictly before the interleaved group, group strictly before p3
+    assert pid[: np.argmax(pid > 0)].max() == 0
+    last_mid = np.max(np.where((pid == 1) | (pid == 2))[0])
+    first_mid = np.min(np.where((pid == 1) | (pid == 2))[0])
+    assert np.all(pid[:first_mid] == 0)
+    assert np.all(pid[last_mid + 1:] == 3)
+    # interleaved phases genuinely blend: both ids appear in each half
+    mid = pid[first_mid:last_mid + 1]
+    half = mid.shape[0] // 2
+    assert {1, 2} <= set(mid[:half].tolist())
+    assert {1, 2} <= set(mid[half:].tolist())
+
+
+def test_oversubscription_scales_footprint_not_n():
+    base = SCENARIOS["graph_pipeline"].compile(n=5000)
+    over = SCENARIOS["graph_pipeline"].compile(n=5000, oversub=2.0)
+    assert over.n == base.n == 5000
+    assert over.footprint == 2 * base.footprint
+
+
+def test_burst_pattern_honors_alpha():
+    """Pattern params must reach the primitive: a heavier power-law tail
+    (larger alpha) concentrates the burst stream on fewer nodes."""
+    from repro.workloads.ir import PATTERNS
+    mild, _ = PATTERNS["burst"](np.random.default_rng(0), 1 << 16, 20_000,
+                                burst=4, alpha=1.05)
+    heavy, _ = PATTERNS["burst"](np.random.default_rng(0), 1 << 16, 20_000,
+                                 burst=4, alpha=2.0)
+    assert np.unique(heavy).size < np.unique(mild).size
+
+
+def test_scenario_regions_respected():
+    """Shared-region phases overlap in address space; disjoint-region
+    tenants never touch each other's columns."""
+    t = SCENARIOS["multi_tenant"].compile(n=30_000)
+    spans = []
+    for i in range(t.n_phases):
+        cols = t.col[t.phase_id == i]
+        spans.append((int(cols.min()), int(cols.max())))
+    spans.sort()
+    for (lo0, hi0), (lo1, hi1) in zip(spans, spans[1:]):
+        assert hi0 < lo1, "tenant regions overlap"
+
+
+# ---------------------------------------------------------------------------
+# Per-phase counter attribution.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_phase_counters_sum_exactly_all_policies(scenario):
+    """All 8 policies, one batched ``simulate_many`` run per scenario:
+    per-phase counter sums equal whole-trace counters float64-bit-for-bit,
+    and the request partition covers the trace."""
+    t = make_trace(scenario, n=N)
+    cfgs = [HMSConfig(footprint=t.footprint, policy=p) for p in ALL_POLICIES]
+    for pol, r in zip(ALL_POLICIES, simulate_many(t, cfgs)):
+        assert r.phase_names == t.phase_names
+        assert set(r.phase_counters) == set(_COUNTERS)
+        for k in _COUNTERS:
+            assert float(np.sum(r.phase_counters[k])) == r.counters[k], (
+                f"{scenario}/{pol}: phase sums drifted on {k}")
+        per_phase_reqs = sum(
+            r.phase_counters[k] for k in ("hit_r", "hit_w", "miss_r",
+                                          "miss_w"))
+        np.testing.assert_array_equal(
+            per_phase_reqs, np.bincount(t.phase_id, minlength=t.n_phases))
+
+
+def test_phase_counters_on_single_tier_orgs():
+    t = make_trace("train_step", n=N)
+    for org in ("inf_hbm", "scm", "hbm"):
+        r = simulate(t, HMSConfig(footprint=t.footprint, organization=org))
+        for k in _COUNTERS:
+            assert float(np.sum(r.phase_counters[k])) == r.counters[k], (
+                org, k)
+        # single-tier orgs have no hit/miss events, but the per-phase
+        # request accounting must still cover the trace via demand counters
+        s = r.phase_summary()
+        assert sum(p["requests"] for p in s.values()) == t.n, org
+        # counters that stayed zero must not alias one shared buffer
+        assert r.phase_counters["hit_r"] is not r.phase_counters["ctc_hit"]
+
+
+def test_um_overflow_capacity_independent_of_cfg_footprint():
+    """The oversubscription sweep pins cfg.footprint at the nominal size
+    while the trace grows; the UM overflow model must see the same resident
+    capacity as an equivalent config expressed against the trace footprint
+    (it sizes frames as footprint * r_hbm, so the two must cancel)."""
+    from repro.workloads import SCENARIOS
+
+    t = SCENARIOS["llm_serve"].compile(n=8000, oversub=4.0)
+    nominal_fp = t.footprint // 4
+    pinned = HMSConfig(footprint=nominal_fp)
+    equiv = HMSConfig(footprint=t.footprint, r_hbm=0.75 / 4)
+    assert pinned.dram_cache_capacity == equiv.dram_cache_capacity
+    assert pinned.scm_capacity == equiv.scm_capacity
+    rp, re = simulate(t, pinned), simulate(t, equiv)
+    assert rp.runtime_cycles == re.runtime_cycles
+    for k in _COUNTERS:
+        assert rp.counters[k] == re.counters[k], k
+    assert rp.terms["fault"] == re.terms["fault"] > 0.0
+
+
+def test_phase_totals_match_reference_engine():
+    """Phased counter reduction must not change whole-trace semantics: the
+    totals still match the frozen seed engine."""
+    from repro.core._reference import reference_counters
+
+    t = make_trace("llm_serve", n=6000)
+    cfg = HMSConfig(footprint=t.footprint)
+    ref = reference_counters(t, cfg)
+    new = simulate(t, cfg).counters
+    for k in _COUNTERS:
+        np.testing.assert_allclose(new[k], ref[k], rtol=1e-9, atol=1e-6,
+                                   err_msg=f"counter {k} diverged")
+
+
+def test_phase_summary_reports_heterogeneity():
+    """The decode KV phase (reuse) must cache better than the weight
+    streaming phases (bypass) — the behavior the subsystem exists to expose."""
+    t = make_trace("llm_serve", n=60_000)
+    r = simulate(t, HMSConfig(footprint=t.footprint))
+    s = r.phase_summary()
+    assert set(s) == set(t.phase_names)
+    assert s["decode_kv"]["hit_rate_read"] > s["decode_w"]["hit_rate_read"]
+    assert s["decode_w"]["bypass_rate"] > 0.5
+    assert sum(p["requests"] for p in s.values()) == t.n
+
+
+def test_unphased_traces_have_no_phase_counters():
+    t = make_trace("zipf", n=6000)
+    r = simulate(t, HMSConfig(footprint=t.footprint))
+    assert r.phase_counters is None and r.phase_names == ()
+    assert r.phase_summary() == {}
+
+
+# ---------------------------------------------------------------------------
+# Counter exactness at scale (ROADMAP trace-scale validation item).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_counter_exactness_at_1e6_requests():
+    """10^6-request scenario trace: counters are float64-exact (bit-for-bit)
+    across shard counts — the auto-selected shard count and a pinned S=8 vs
+    the S=1 sequential scan — and the per-phase decomposition stays exact
+    at that scale."""
+    t = make_trace("llm_serve", n=1_000_000)
+    cfg = HMSConfig(footprint=t.footprint)
+
+    auto = simulate(t, cfg)              # cost-model-selected shard count
+    old = set_forced_shards(8)
+    try:
+        sharded = simulate(t, cfg)
+    finally:
+        set_forced_shards(old)
+    old_cap = set_max_shards(1)
+    try:
+        seq = simulate(t, cfg)
+    finally:
+        set_max_shards(old_cap)
+
+    for r in (auto, sharded):
+        for k in _COUNTERS:
+            assert r.counters[k] == seq.counters[k], k
+            np.testing.assert_array_equal(r.phase_counters[k],
+                                          seq.phase_counters[k])
+            assert float(np.sum(r.phase_counters[k])) == r.counters[k], k
+    total = sum(seq.counters[k] for k in ("hit_r", "hit_w", "miss_r",
+                                          "miss_w"))
+    assert total == 1_000_000.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: make_trace / generator exactness, scm auto mode.
+# ---------------------------------------------------------------------------
+
+def test_all_generators_honor_n_exactly():
+    for name in WORKLOADS:
+        t = make_trace(name, n=10_001)
+        assert t.n == 10_001, name
+
+
+def test_make_trace_scale_generates_once():
+    """Scaled make_trace must not build a throwaway full trace just to read
+    the footprint off it."""
+    calls = {"n": 0}
+    orig = WORKLOADS["bfs_tu"]
+
+    def counting(**kw):
+        calls["n"] += 1
+        return orig(**kw)
+
+    import functools
+    import inspect
+    counting_sig = functools.partial(counting)
+    # preserve the signature make_trace introspects for the footprint
+    counting_sig.__signature__ = inspect.signature(orig)
+    WORKLOADS["bfs_tu"] = counting_sig
+    try:
+        t = make_trace("bfs_tu", scale=0.5, n=4000)
+    finally:
+        WORKLOADS["bfs_tu"] = orig
+    assert calls["n"] == 1
+    assert t.n == 4000
+    from repro.core.traces import workload_default_footprint
+    assert t.footprint == workload_default_footprint(orig) // 2
+
+
+def test_scm_mode_auto_footprint_adaptation():
+    """§III-E: auto picks the fastest mode whose capacity holds the
+    footprint, and simulates identically to that explicit mode."""
+    assert HMSConfig(scm_mode="auto", r_hbm=1.5).effective_scm_mode == "slc"
+    assert HMSConfig(scm_mode="auto").effective_scm_mode == "mlc"
+    assert HMSConfig(scm_mode="auto", r_hbm=0.25).effective_scm_mode == "tlc"
+    # explicit modes resolve to themselves regardless of footprint
+    for mode in ("slc", "mlc", "tlc"):
+        assert HMSConfig(scm_mode=mode, r_hbm=0.25).effective_scm_mode == mode
+    # the cell mode that sets the timings also sets the capacity: the same
+    # dies hold half the MLC bytes in SLC and 1.5x in TLC
+    mlc_cap = HMSConfig(scm_mode="mlc").scm_capacity
+    assert HMSConfig(scm_mode="slc").scm_capacity == mlc_cap // 2
+    assert HMSConfig(scm_mode="tlc").scm_capacity == int(1.5 * mlc_cap)
+    # so an auto config that resolves to TLC for density actually *gets*
+    # the density: the capacity the UM-overflow check sees is TLC-sized
+    cfg = HMSConfig(scm_mode="auto", r_hbm=0.55, dram_ratio=0.8)
+    assert cfg.effective_scm_mode == "tlc"
+    assert cfg.footprint <= cfg.scm_capacity + cfg.dram_cache_capacity
+    t = make_trace("zipf", n=8000)
+    for r_hbm in (1.5, 0.75, 0.25):
+        auto = HMSConfig(footprint=t.footprint, scm_mode="auto", r_hbm=r_hbm)
+        expl = dataclasses.replace(auto, scm_mode=auto.effective_scm_mode)
+        ra, re = simulate(t, auto), simulate(t, expl)
+        for k in _COUNTERS:
+            assert ra.counters[k] == re.counters[k], (r_hbm, k)
+        assert ra.runtime_cycles == re.runtime_cycles
