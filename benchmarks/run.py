@@ -17,6 +17,7 @@ import time
 
 def main() -> None:
     from . import figures, kernel_bench, roofline, scenarios
+    from . import um as um_bench
     from .common import emit
 
     suites = {
@@ -32,6 +33,7 @@ def main() -> None:
         "prior": figures.prior_traffic,
         "sweep": figures.sweep_design_space,
         "scenarios": scenarios.run,
+        "um": um_bench.run,
         "kernels": kernel_bench.run,
         "roofline": roofline.run,
     }

@@ -1,0 +1,115 @@
+"""UM paging-engine benchmark: rel-footprint x link-mode sweep through the
+batched engine vs the frozen sequential reference loop.
+
+For each benchmarked trace the suite sweeps relative footprint (workload
+footprint / HBM capacity) over {1.25, 1.5, 2, 4} in both link modes
+({fault-driven chunked migration, nvlink access-counter migration}) — the
+Fig. 15/17-style oversubscription grid — three ways:
+
+  * cold: fresh engine cache, one batched ``simulate_um_many`` call
+    (compile + run; the whole 8-point grid is ONE engine entry),
+  * warm: same call with results cleared but the compiled engine kept
+    (the steady-state sweep cost),
+  * reference: the frozen ``run_um_reference`` scan once per point (the
+    pre-subsystem cost: a re-trace + sequential run per point).
+
+Writes ``benchmarks/artifacts/BENCH_um.json`` with the wall/compile split,
+the measured speedup vs the reference loop, per-point counters (parity
+asserted against the reference while we have both), and host metadata.
+
+    PYTHONPATH=src python -m benchmarks.run um
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+from .common import bench_n, host_metadata, trace
+
+REL_GRID = (1.25, 1.5, 2.0, 4.0)
+MODES = (False, True)                      # fault-driven, nvlink
+
+# one phased scenario (per-phase UM attribution in play) + one classic
+# irregular trace
+UM_WORKLOADS = ("moe_expert", "bfs_tu")
+
+
+def run(results: Dict) -> List[tuple]:
+    from repro import um
+    from repro.core import HMSConfig
+    from repro.um._reference import run_um_reference
+
+    n = bench_n()
+    rows = []
+    detail = {}
+    for w in UM_WORKLOADS:
+        t = trace(w)
+        cfgs = {(rel, nv): HMSConfig(footprint=t.footprint,
+                                     organization="hbm", r_hbm=1.0 / rel)
+                for rel in REL_GRID for nv in MODES}
+        specs = [um.um_spec(cfg, nvlink=nv)
+                 for (rel, nv), cfg in cfgs.items()]
+
+        um.clear_um_caches()
+        t0 = time.time()
+        rs = um.simulate_um_many(t, specs)
+        cold_s = time.time() - t0
+        assert um.um_engine_cache_size() == 1, "grid split engine entries"
+
+        um.clear_um_results()
+        t0 = time.time()
+        rs = um.simulate_um_many(t, specs)
+        warm_s = time.time() - t0
+
+        # the frozen loop: one re-traced sequential scan per point
+        t0 = time.time()
+        refs = [run_um_reference(t, cfg, nvlink=nv)
+                for (rel, nv), cfg in cfgs.items()]
+        ref_s = time.time() - t0
+        for (key, r, ref) in zip(cfgs, rs, refs):
+            got = (r.faults, r.migrated, r.writebacks, r.remote_cols)
+            assert got == tuple(float(x) for x in ref), (
+                f"UM engine diverged from reference at {key}")
+
+        points = [{
+            "rel_footprint": rel,
+            "nvlink": nv,
+            "faults": r.faults,
+            "migrated_pages": r.migrated,
+            "writeback_pages": r.writebacks,
+            "remote_cols": r.remote_cols,
+            "link_bytes": r.link_bytes,
+        } for (rel, nv), r in zip(cfgs, rs)]
+        detail[w] = {
+            "n": n,
+            "footprint_bytes": t.footprint,
+            "points": points,
+            "grid_points": len(specs),
+            "engine_entries": um.um_engine_cache_size(),
+            "cold_s": cold_s,
+            "warm_s": warm_s,
+            "compile_s": max(0.0, cold_s - warm_s),
+            "reference_s": ref_s,
+            "speedup_vs_reference": ref_s / max(warm_s, 1e-9),
+            "parity": True,
+        }
+        worst = max(points, key=lambda p: p["rel_footprint"] * (
+            not p["nvlink"]))
+        rows.append((f"um.{w}", warm_s / len(specs) * 1e6,
+                     f"points={len(specs)}|warm={warm_s:.2f}s"
+                     f"|ref={ref_s:.1f}s"
+                     f"|speedup={detail[w]['speedup_vs_reference']:.1f}x"
+                     f"|faults@4x={worst['faults']:.0f}"))
+    results["um"] = detail
+
+    art = os.path.join(os.path.dirname(__file__), "artifacts")
+    os.makedirs(art, exist_ok=True)
+    with open(os.path.join(art, "BENCH_um.json"), "w") as f:
+        json.dump({"n": n, "rel_grid": list(REL_GRID),
+                   "modes": ["fault", "nvlink"],
+                   "host": host_metadata(), "workloads": detail},
+                  f, indent=1)
+    return rows

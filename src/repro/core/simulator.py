@@ -59,9 +59,17 @@ split so a sweep costs one compile and one short device loop:
     parameter sets sharing one static structure, so Fig. 18-style CTC
     sweeps and policy ablations cost one compile + one device loop over
     ``configs x shards``.
+  * The **Unified-Memory baseline** (oversubscribed HBM + page migration,
+    and the HMS overflow path) lives in ``repro.um`` — the same
+    compile-once treatment for the paging scan: bucketed page/frame
+    allocations key a jit cache, capacity / chunk / link mode are traced
+    scalars, batches vmap over UM configs, and fault/migration counters
+    are segment-summed per phase.  ``simulate_many`` prefetches every UM
+    point a config batch needs through one batched call, deduped by spec.
 
-The seed formulation survives in ``_reference`` and a golden-parity test
-pins this engine to it counter-for-counter.
+The seed formulation survives in ``_reference`` (and ``um/_reference`` for
+the paging scan) and golden-parity tests pin both engines to it
+counter-for-counter.
 """
 
 from __future__ import annotations
@@ -89,6 +97,12 @@ from .timing import (
     HMSConfig,
 )
 from .traces import Trace, geometry_key, preprocess, shard_plan
+
+# Module (not symbol) import: repro.um imports repro.core.timing/traces,
+# which are fully initialized before repro.core.__init__ reaches this
+# module, and the sys.modules fallback keeps the reverse edge safe when
+# repro.um is imported first.  Attributes are only touched at call time.
+from repro import um as _um
 
 _COUNTERS = (
     # bus traffic, in 32B columns
@@ -124,7 +138,10 @@ class SimResult:
     power_w: float
     # Phase attribution (scenario traces): counters[k] ==
     # float(np.sum(phase_counters[k])) bit-for-bit, because the totals are
-    # *computed* as that sum.  Empty/None for unphased traces.
+    # *computed* as that sum.  Empty/None for unphased traces.  When the
+    # UM paging model ran (hbm organization, or an HMS footprint overflow)
+    # both dicts additionally carry um_faults / um_migrated /
+    # um_writebacks / um_remote_cols with the same exact-sum guarantee.
     phase_names: tuple = ()
     phase_counters: Dict[str, np.ndarray] | None = None
 
@@ -163,6 +180,17 @@ class SimResult:
                 "scm_bytes": scm_cols * COLUMN_BYTES,
                 "scm_write_cols": c["demand_scm_wr"] + c["wb_scm_wr"],
             }
+            if "um_faults" in c:
+                # UM paging attribution (oversubscribed runs): exact by
+                # construction — the whole-trace totals are these sums
+                out[name].update({
+                    "um_faults": c["um_faults"],
+                    "um_migrated_pages": c["um_migrated"],
+                    "um_writeback_pages": c["um_writebacks"],
+                    "um_remote_cols": c["um_remote_cols"],
+                    "um_link_bytes": (c["um_migrated"] + c["um_writebacks"])
+                    * UM_PAGE_BYTES + c["um_remote_cols"] * COLUMN_BYTES,
+                })
         return out
 
 
@@ -799,104 +827,33 @@ def _single_tier_counters(trace: Trace, cfg: HMSConfig, device):
 
 
 # ---------------------------------------------------------------------------
-# Oversubscribed-HBM Unified-Memory baseline.
+# Oversubscribed-HBM Unified-Memory baseline — routed through the batched
+# paging engine in ``repro.um`` (the seed scan is frozen in
+# ``repro.um._reference``).
 # ---------------------------------------------------------------------------
 
-def _run_um(trace: Trace, cfg: HMSConfig, nvlink: bool = False):
-    """Page-granular UM simulation: FIFO frames + TBN-style chunk migration.
+def _um_overflow_config(trace: Trace, cfg: HMSConfig) -> HMSConfig | None:
+    """The UM config of an HMS footprint overflow (Fig. 17's rel-footprint
+    4.0 case), or ``None`` when the HMS capacity holds the trace.
 
-    Returns (faults, migrated_pages, writeback_pages, remote_cols).
-    """
-    page = (trace.col * COLUMN_BYTES) // UM_PAGE_BYTES
-    is_write = trace.is_write
-    n_pages = int(page.max(initial=0)) + 1
-    n_frames = max(1, cfg.hbm_capacity // UM_PAGE_BYTES)
-    chunk = cfg.um_prefetch_pages
+    The UM model sizes frames as footprint * r_hbm, so footprint must be
+    the TRACE's (cfg.footprint may be pinned at a nominal size — the
+    scenario oversubscription sweep does exactly that) for the ratio to
+    cancel and the resident bytes to equal the HMS capacity."""
+    if trace.footprint <= cfg.scm_capacity + cfg.dram_cache_capacity:
+        return None
+    return dataclasses.replace(
+        cfg, footprint=trace.footprint,
+        r_hbm=(cfg.scm_capacity + cfg.dram_cache_capacity)
+        / trace.footprint)
 
-    if n_frames >= n_pages:
-        return 0, 0, 0, 0
 
-    page_j = jnp.asarray(page.astype(np.int32))
-    wr_j = jnp.asarray(is_write)
-
-    def step(carry, x):
-        resident, dirty, frames, ptr, f, mig, wb, rem, hotness = carry
-        p, w = x
-        hotness = hotness.at[p].add(1)
-        is_res = resident[p]
-
-        if nvlink:
-            # Access-counter migration: cold pages are accessed remotely in
-            # cacheline granularity; pages crossing the hotness threshold
-            # migrate (no fault stall on hardware-coherent links).
-            migrate = (~is_res) & (hotness[p] >= 4)
-            remote = (~is_res) & ~migrate
-            rem = rem + remote
-            mchunk = 1
-            fault = migrate
-        else:
-            fault = ~is_res
-            migrate = fault
-            mchunk = chunk
-            remote = jnp.asarray(False)
-
-        f = f + fault
-
-        def do_migrate(args):
-            resident, dirty, frames, ptr, mig, wb = args
-            base = (p // mchunk) * mchunk
-            idx = base + jnp.arange(mchunk, dtype=jnp.int32)
-            idx = jnp.clip(idx, 0, n_pages - 1).astype(jnp.int32)
-            newly = ~resident[idx]
-            mig_n = jnp.sum(newly)
-            # Evict as many frames as we bring in.  CLOCK-flavoured: scan a
-            # window of 4x chunk candidates from the hand and prefer cold
-            # (low-hotness) victims, approximating UM's pre-eviction policy
-            # (plain FIFO thrashes hot pages and wildly over-penalizes
-            # oversubscription relative to the paper's measurements).
-            window = 4 * mchunk
-            cand_idx = (ptr + jnp.arange(window, dtype=jnp.int32)) % n_frames
-            cand_pages = frames[cand_idx]
-            cand_hot = jnp.where(cand_pages >= 0,
-                                 hotness[jnp.maximum(cand_pages, 0)], 0)
-            order = jnp.argsort(cand_hot)           # coldest first
-            ev_slot = cand_idx[order[:mchunk]]
-            ev_pages = frames[ev_slot]
-            ev_valid = (ev_pages >= 0) & newly      # evict one per new page
-            wb_n = jnp.sum(jnp.where(ev_valid, dirty[ev_pages], False))
-            resident = resident.at[ev_pages].set(
-                jnp.where(ev_valid, False, resident[ev_pages]))
-            dirty = dirty.at[ev_pages].set(
-                jnp.where(ev_valid, False, dirty[ev_pages]))
-            resident = resident.at[idx].set(True)
-            frames = frames.at[ev_slot].set(jnp.where(newly, idx, ev_pages))
-            ptr2 = ((ptr + mig_n) % n_frames).astype(jnp.int32)
-            return resident, dirty, frames, ptr2, mig + mig_n, wb + wb_n
-
-        resident, dirty, frames, ptr, mig, wb = jax.lax.cond(
-            migrate,
-            do_migrate,
-            lambda a: a,
-            (resident, dirty, frames, ptr, mig, wb),
-        )
-        dirty = dirty.at[p].set(dirty[p] | (w & resident[p]))
-        return (resident, dirty, frames, ptr, f, mig, wb, rem, hotness), None
-
-    init = (
-        jnp.zeros((n_pages,), jnp.bool_),
-        jnp.zeros((n_pages,), jnp.bool_),
-        jnp.full((n_frames,), -1, jnp.int32),
-        jnp.zeros((), jnp.int32),
-        jnp.zeros((), jnp.int64),
-        jnp.zeros((), jnp.int64),
-        jnp.zeros((), jnp.int64),
-        jnp.zeros((), jnp.int64),
-        jnp.zeros((n_pages,), jnp.int32),
-    )
-    (res, dirty, frames, ptr, f, mig, wb, rem, hot), _ = jax.lax.scan(
-        step, init, (page_j, wr_j)
-    )
-    return int(f), int(mig), int(wb), int(rem)
+def _um_fault_cycles(um, cfg: HMSConfig, nvlink: bool) -> float:
+    """Serialized fault-handling term: hardware-coherent links fault-stall
+    nothing; the PCIe path pays the (overlapped) fault latency."""
+    if nvlink:
+        return 0.0
+    return um.faults * cfg.fault_latency_ns / cfg.fault_overlap
 
 
 # ---------------------------------------------------------------------------
@@ -934,11 +891,14 @@ def _energy(C: Dict[str, float], cfg: HMSConfig, link_bytes: float):
 
 
 def _finish(name, cfg, C, link_bytes=0.0, fault_cycles=0.0,
-            n_requests=1, phase_names=()) -> SimResult:
+            n_requests=1, phase_names=(), um=None) -> SimResult:
     # Split phased counters: per-phase vectors are kept verbatim and the
     # whole-trace totals are their sums (so per-phase attribution is exact
     # bit-for-bit by construction — np.sum over the same float64 vector is
-    # deterministic).
+    # deterministic).  UM paging counters (when the paging model ran) join
+    # the same split: per-phase vectors for phased traces, floats otherwise.
+    if um is not None:
+        C = {**C, **um.counter_arrays()}
     phase_counters = None
     totals: Dict[str, float] = {}
     for k, v in C.items():
@@ -1010,27 +970,23 @@ def _finish(name, cfg, C, link_bytes=0.0, fault_cycles=0.0,
 
 def _finish_hms(trace: Trace, cfg: HMSConfig, C: Dict[str, float],
                 nvlink: bool) -> SimResult:
-    """Shared tail of the hms/separate path: optional UM overflow + finish."""
+    """Shared tail of the hms/separate path: optional UM overflow + finish.
+
+    When the HMS itself is oversubscribed the UM model faults against the
+    HMS capacity on top of the cache model; the paging run is memoized per
+    (trace, spec) inside ``repro.um``, so a sweep that was prefetched by
+    ``simulate_many`` never re-runs the scan here."""
     fault_cycles = 0.0
     link_bytes = 0.0
-    if trace.footprint > cfg.scm_capacity + cfg.dram_cache_capacity:
-        # HMS itself oversubscribed (Fig. 17's rel-footprint 4.0 case):
-        # UM faults against the *SCM* capacity on top of the cache model.
-        # The UM model sizes frames as footprint * r_hbm, so footprint must
-        # be the TRACE's (cfg.footprint may be pinned at a nominal size —
-        # the scenario oversubscription sweep does exactly that) for the
-        # ratio to cancel and the resident bytes to equal the HMS capacity.
-        big = dataclasses.replace(
-            cfg, footprint=trace.footprint,
-            r_hbm=(cfg.scm_capacity + cfg.dram_cache_capacity)
-            / trace.footprint)
-        faults, mig, wb, remote = _run_um(trace, big, nvlink=nvlink)
-        link_bytes = (mig + wb) * UM_PAGE_BYTES + remote * COLUMN_BYTES
-        fault_cycles = (0.0 if nvlink
-                        else faults * cfg.fault_latency_ns / cfg.fault_overlap)
+    um = None
+    big = _um_overflow_config(trace, cfg)
+    if big is not None:
+        um = _um.simulate_um(trace, big, nvlink=nvlink)
+        link_bytes = um.link_bytes
+        fault_cycles = _um_fault_cycles(um, cfg, nvlink)
     return _finish(trace.name, cfg, C, link_bytes=link_bytes,
                    fault_cycles=fault_cycles, n_requests=trace.n,
-                   phase_names=trace.phase_names)
+                   phase_names=trace.phase_names, um=um)
 
 
 # ---------------------------------------------------------------------------
@@ -1053,15 +1009,13 @@ def simulate(trace: Trace, cfg: HMSConfig, nvlink: bool = False) -> SimResult:
                        phase_names=trace.phase_names)
 
     if org == "hbm":
-        # Oversubscribed HBM + UM over the host link.
+        # Oversubscribed HBM + UM over the host link (batched engine).
         C = _single_tier_counters(trace, cfg, cfg.dram_timing)
-        faults, mig, wb, remote = _run_um(trace, cfg, nvlink=nvlink)
-        link_bytes = (mig + wb) * UM_PAGE_BYTES + remote * COLUMN_BYTES
-        fault_cycles = (0.0 if nvlink
-                        else faults * cfg.fault_latency_ns / cfg.fault_overlap)
-        return _finish(trace.name, cfg, C, link_bytes=link_bytes,
-                       fault_cycles=fault_cycles, n_requests=trace.n,
-                       phase_names=trace.phase_names)
+        um = _um.simulate_um(trace, cfg, nvlink=nvlink)
+        return _finish(trace.name, cfg, C, link_bytes=um.link_bytes,
+                       fault_cycles=_um_fault_cycles(um, cfg, nvlink),
+                       n_requests=trace.n,
+                       phase_names=trace.phase_names, um=um)
 
     # hms / separate
     pre = preprocess(trace, cfg)
@@ -1076,13 +1030,29 @@ def simulate_many(trace: Trace, configs: Sequence[HMSConfig],
     Configs whose static structure matches (same policy and compatible
     bucketed geometry) are vmapped over their runtime parameters and run as
     one compiled, batched scan — a CTC-way sweep or tag-layout ablation
-    costs one compile + one device loop over ``configs x shards``.
-    Non-scan organizations (inf_hbm / scm / hbm) fall back to the
-    sequential path.  Results come back in input order and match sequential
+    costs one compile + one device loop over ``configs x shards``.  Every
+    UM paging point the batch needs — hbm-organization configs and HMS
+    footprint overflows — is prefetched through ONE batched
+    ``um.simulate_um_many`` call, deduped by UM spec, so configs sharing
+    (capacity, chunk, link mode) run the paging scan once for the whole
+    sweep.  Results come back in input order and match sequential
     ``simulate`` counter-for-counter.
     """
     configs = [c.validate() for c in configs]
     results: List[SimResult | None] = [None] * len(configs)
+
+    um_specs = []
+    for cfg in configs:
+        if cfg.organization == "hbm":
+            um_specs.append(_um.um_spec(cfg, nvlink))
+        elif cfg.organization in ("hms", "separate"):
+            big = _um_overflow_config(trace, cfg)
+            if big is not None:
+                um_specs.append(_um.um_spec(big, nvlink))
+    if um_specs:
+        # warm the per-trace UM result cache in one vmapped engine call;
+        # the per-config paths below hit the memoized results
+        _um.simulate_um_many(trace, um_specs)
 
     groups: Dict[tuple, List[int]] = {}
     for i, cfg in enumerate(configs):

@@ -157,6 +157,8 @@ class HMSConfig:
     fault_latency_ns: float = PAGE_FAULT_LATENCY_NS
     fault_overlap: float = 16.0          # concurrent fault handling factor
     um_prefetch_pages: int = 4           # TBN-style migration chunk (16 KiB)
+    um_hot_threshold: int = 4            # access count triggering nvlink
+    #                                      access-counter migration
 
     # Activation-counter grain.  The paper uses 2 MiB for GiB-scale GPU
     # memories (80 KiB of counters for 160 GiB); we default to the same

@@ -1,0 +1,32 @@
+"""Unified-Memory paging subsystem: the oversubscribed-HBM baseline as a
+compile-once, batched engine.
+
+``repro.core.simulator`` routes every UM path through this package — the
+``organization="hbm"`` baseline and the HMS overflow model (Fig. 17's
+rel-footprint > capacity points) — so a whole capacity sweep costs one
+compile + one vmapped device loop, with per-phase fault attribution carried
+through the same scan.  The seed formulation is frozen in
+``repro.um._reference`` and ``tests/test_um_engine.py`` pins the engine to
+it on all four outputs (faults / migrated pages / writeback pages / remote
+columns) in both link modes.
+"""
+
+from .engine import (
+    UMResult,
+    UMSpec,
+    clear_um_caches,
+    clear_um_results,
+    simulate_um,
+    simulate_um_many,
+    um_engine_cache_size,
+    um_engine_trace_count,
+    um_group_key,
+    um_lanes_run,
+    um_spec,
+)
+
+__all__ = [
+    "UMResult", "UMSpec", "um_spec", "simulate_um", "simulate_um_many",
+    "um_group_key", "um_engine_cache_size", "um_engine_trace_count",
+    "um_lanes_run", "clear_um_caches", "clear_um_results",
+]

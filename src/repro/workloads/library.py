@@ -16,6 +16,12 @@ the bypass / CTC machinery:
   multi_tenant    three tenants on disjoint regions running concurrently:
                   a streaming stencil, a zipf key-value service, and a graph
                   job — the shared-GPU mix the oversubscription knob probes.
+  moe_expert      MoE serving: a dense router phase followed by zipf-hot
+                  expert weight-shard gathers (a few hot experts absorb most
+                  tokens) interleaved with a growing KV stream — the
+                  ROADMAP expert-routing item, and the natural stress case
+                  for the oversubscribed-UM path (cold experts page out,
+                  hot experts must stay resident).
 
 All are registered in :data:`SCENARIOS` and (via ``repro.workloads``) in the
 core ``WORKLOADS`` registry, so ``make_trace("llm_serve", n=...)`` and every
@@ -108,6 +114,32 @@ MULTI_TENANT = Scenario(
     ),
 )
 
+MOE_EXPERT = Scenario(
+    name="moe_expert",
+    description="MoE serving: dense router + zipf-hot expert weight shards",
+    footprint=48 * MiB,
+    regions={"router": 0.08, "experts": 0.72, "kv": 0.20},
+    phases=(
+        # every token hits the (small, dense) router weights first — a
+        # tight re-streamed region that caches perfectly
+        Phase("router_gemm", "router", "stream", weight=1.0),
+        # expert weight shards: token routing concentrates on a few hot
+        # experts (1/8 of the shards absorb ~85% of gathers), the rest of
+        # the expert pool is touched cold — exactly the residency split
+        # the UM paging model's hotness-driven migration keys on
+        Phase("expert_up", "experts", "zipf", weight=3.0,
+              params={"hot_frac": 0.125, "hot_prob": 0.85},
+              interleave="experts"),
+        Phase("expert_down", "experts", "zipf", weight=2.0,
+              params={"hot_frac": 0.125, "hot_prob": 0.85},
+              interleave="experts"),
+        # per-token KV growth rides along with the expert gathers
+        Phase("kv_append", "kv", "growing", weight=1.0, write_frac=0.15,
+              params={"lo_frac": 0.10}, interleave="experts"),
+    ),
+)
+
 SCENARIOS: Dict[str, Scenario] = {
-    s.name: s for s in (LLM_SERVE, TRAIN_STEP, GRAPH_PIPELINE, MULTI_TENANT)
+    s.name: s for s in (LLM_SERVE, TRAIN_STEP, GRAPH_PIPELINE, MULTI_TENANT,
+                        MOE_EXPERT)
 }

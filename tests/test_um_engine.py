@@ -1,0 +1,249 @@
+"""Golden parity + batching guarantees of the UM paging engine.
+
+The batched engine in ``repro.um`` must reproduce the frozen sequential
+reference (``repro.um._reference``) on all four outputs — faults, migrated
+pages, writeback pages, remote columns — in both link modes, run a whole
+rel-footprint sweep through ONE compiled engine entry, dedupe identical
+sweep points, and attribute every counter per phase with per-phase sums
+equal to the whole-trace totals float64-bit-for-bit.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import um
+from repro.core import HMSConfig, make_trace, simulate, simulate_many
+from repro.core.simulator import _um_overflow_config
+from repro.core.timing import COLUMN_BYTES, UM_PAGE_BYTES
+from repro.core.traces import Trace
+from repro.um._reference import run_um_reference
+from repro.workloads import SCENARIOS
+
+UM_KEYS = ("um_faults", "um_migrated", "um_writebacks", "um_remote_cols")
+
+
+def _um_trace(n=6000, footprint=8 * 2**20, seed=5):
+    """Zipf-hot mix with writes: hot pages should stay resident, the cold
+    tail should churn frames — exercises migration, eviction and
+    writebacks."""
+    rng = np.random.default_rng(seed)
+    total = footprint // COLUMN_BYTES
+    hot = total // 16
+    is_hot = rng.random(n) < 0.6
+    col = np.where(is_hot,
+                   rng.integers(0, hot, size=n),
+                   rng.integers(hot, total, size=n)).astype(np.int64)
+    # a streaming tail so faults cluster per phase-less region too
+    col[2 * n // 3:] = (np.arange(n - 2 * n // 3, dtype=np.int64)
+                        * 7) % total
+    wr = rng.random(n) < 0.3
+    return Trace("um_golden", col, wr, footprint)
+
+
+def _totals(r: um.UMResult):
+    return (r.faults, r.migrated, r.writebacks, r.remote_cols)
+
+
+# ---------------------------------------------------------------------------
+# Frozen-reference parity.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r_hbm,chunk", [(0.3, 4), (0.6, 1), (0.85, 8)],
+                         ids=["deep_oversub", "unchunked", "shallow_chunk8"])
+def test_reference_parity_fault_mode(r_hbm, chunk):
+    """Fault-driven chunked migration matches the frozen scan exactly."""
+    t = _um_trace()
+    cfg = HMSConfig(footprint=t.footprint, r_hbm=r_hbm,
+                    um_prefetch_pages=chunk, organization="hbm")
+    ref = run_um_reference(t, cfg, nvlink=False)
+    got = _totals(um.simulate_um(t, cfg, nvlink=False))
+    assert got == tuple(float(x) for x in ref)
+    assert got[0] > 0 and got[1] > 0      # the case actually paged
+
+
+@pytest.mark.parametrize("r_hbm", [0.3, 0.7], ids=["deep", "shallow"])
+def test_reference_parity_nvlink(r_hbm):
+    """Access-counter migration + remote cacheline accesses match the
+    frozen scan exactly (including the remote-column count)."""
+    t = _um_trace()
+    cfg = HMSConfig(footprint=t.footprint, r_hbm=r_hbm, organization="hbm")
+    ref = run_um_reference(t, cfg, nvlink=True)
+    got = _totals(um.simulate_um(t, cfg, nvlink=True))
+    assert got == tuple(float(x) for x in ref)
+    assert got[3] > 0                      # remote traffic flowed
+
+
+def test_early_out_when_frames_cover_pages():
+    """n_frames >= n_pages: zero counters, no engine lane executed."""
+    t = _um_trace()
+    cfg = HMSConfig(footprint=t.footprint, r_hbm=1.5, organization="hbm")
+    before = um.um_lanes_run()
+    r = um.simulate_um(t, cfg)
+    assert _totals(r) == (0.0, 0.0, 0.0, 0.0)
+    assert um.um_lanes_run() == before
+    assert run_um_reference(t, cfg) == (0, 0, 0, 0)
+
+
+def test_um_outputs_are_exact_integers():
+    t = _um_trace()
+    r = um.simulate_um(t, HMSConfig(footprint=t.footprint, r_hbm=0.5,
+                                    organization="hbm"))
+    for v in _totals(r):
+        assert v == int(v)
+
+
+# ---------------------------------------------------------------------------
+# Compile-once batching.
+# ---------------------------------------------------------------------------
+
+def test_rel_footprint_sweep_is_one_engine_entry():
+    """A rel-footprint x link-mode grid runs as ONE compiled, vmapped scan
+    (one engine-cache entry, traced once) and equals per-spec sequential
+    runs counter-for-counter."""
+    t = _um_trace()
+    specs = [um.um_spec(HMSConfig(footprint=t.footprint, r_hbm=1.0 / rel),
+                        nvlink=nv)
+             for rel in (1.25, 1.5, 2.0, 4.0) for nv in (False, True)]
+    um.clear_um_caches()
+    batched = um.simulate_um_many(t, specs)
+    assert um.um_engine_cache_size() == 1
+    assert um.um_engine_trace_count(um.um_group_key(t, specs)) == 1
+    um.clear_um_caches()
+    for s, rb in zip(specs, batched):
+        rs = um.simulate_um_many(t, [s])[0]
+        assert _totals(rb) == _totals(rs), s
+        np.testing.assert_array_equal(rb.phase_faults, rs.phase_faults)
+
+
+def test_runtime_scalar_resweep_never_retraces():
+    """A second sweep with different capacities but the same bucketed
+    allocations and batch width reuses the compiled engine (runtime
+    scalars only; jit re-specializes per batch width like the HMS
+    engine's batched variant)."""
+    t = _um_trace()
+    um.clear_um_caches()
+    specs_a = [um.um_spec(HMSConfig(footprint=t.footprint, r_hbm=r))
+               for r in (0.50, 0.55, 0.60)]
+    um.simulate_um_many(t, specs_a)
+    key = um.um_group_key(t, specs_a)
+    warm = um.um_engine_trace_count(key)
+    specs_b = [um.um_spec(HMSConfig(footprint=t.footprint, r_hbm=r,
+                                    um_prefetch_pages=c))
+               for r, c in ((0.52, 4), (0.58, 2), (0.61, 3))]
+    assert um.um_group_key(t, specs_b) == key
+    um.simulate_um_many(t, specs_b)
+    assert um.um_engine_trace_count(key) == warm, "re-sweep re-traced"
+
+
+def test_simulate_many_dedupes_identical_um_points():
+    """hbm-org configs sharing (capacity, chunk, nvlink) run the paging
+    scan once for the whole batch; distinct points add one lane each."""
+    t = _um_trace(seed=9)
+    kw = dict(footprint=t.footprint, organization="hbm")
+    cfgs = [HMSConfig(r_hbm=0.5, **kw),
+            HMSConfig(r_hbm=0.5, scm_mode="slc", **kw),   # same UM spec
+            HMSConfig(r_hbm=0.4, **kw)]
+    before = um.um_lanes_run()
+    rs = simulate_many(t, cfgs)
+    assert um.um_lanes_run() - before == 2
+    for k in UM_KEYS:
+        assert rs[0].counters[k] == rs[1].counters[k]
+    # the memoized point is also shared by later sequential calls
+    before = um.um_lanes_run()
+    r_seq = simulate(t, cfgs[0])
+    assert um.um_lanes_run() == before
+    assert r_seq.counters["um_faults"] == rs[0].counters["um_faults"]
+
+
+# ---------------------------------------------------------------------------
+# Per-phase attribution.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_phase_um_sums_equal_totals(scenario):
+    """Every registered scenario, oversubscribed hbm organization: the
+    per-phase UM counter sums equal the whole-trace totals bit-for-bit,
+    and phase_summary gains consistent UM columns."""
+    t = make_trace(scenario, n=5000)
+    r = simulate(t, HMSConfig(footprint=t.footprint, organization="hbm",
+                              r_hbm=0.5))
+    assert r.counters["um_faults"] > 0, "case never paged — dead test"
+    for k in UM_KEYS:
+        assert k in r.phase_counters
+        assert r.phase_counters[k].shape == (t.n_phases,)
+        assert float(np.sum(r.phase_counters[k])) == r.counters[k], (
+            f"{scenario}: phase sums drifted on {k}")
+    s = r.phase_summary()
+    assert all("um_faults" in p for p in s.values())
+    assert sum(p["um_link_bytes"] for p in s.values()) == pytest.approx(
+        r.traffic_bytes["link"])
+
+
+def test_phased_totals_match_reference():
+    """Phase-segmented reduction must not change whole-trace UM semantics:
+    totals still equal the frozen (phase-blind) reference scan."""
+    t = make_trace("moe_expert", n=5000)
+    cfg = HMSConfig(footprint=t.footprint, organization="hbm", r_hbm=0.5)
+    ref = run_um_reference(t, cfg)
+    r = simulate(t, cfg)
+    assert (r.counters["um_faults"], r.counters["um_migrated"],
+            r.counters["um_writebacks"],
+            r.counters["um_remote_cols"]) == tuple(float(x) for x in ref)
+
+
+def test_overflow_path_uses_um_engine_and_reports_phases():
+    """HMS footprint overflow (oversub > capacity) routes through the
+    engine: UM counters appear, match the frozen reference on the derived
+    overflow config, and feed the fault/link runtime terms."""
+    t = SCENARIOS["llm_serve"].compile(n=5000, oversub=4.0)
+    cfg = HMSConfig(footprint=t.footprint // 4)   # pinned nominal capacity
+    big = _um_overflow_config(t, cfg)
+    assert big is not None
+    ref = run_um_reference(t, big)
+    r = simulate(t, cfg)
+    assert r.counters["um_faults"] == float(ref[0]) > 0
+    for k in UM_KEYS:
+        assert float(np.sum(r.phase_counters[k])) == r.counters[k], k
+    assert r.terms["fault"] == (ref[0] * cfg.fault_latency_ns
+                                / cfg.fault_overlap)
+    assert r.traffic_bytes["link"] == ((ref[1] + ref[2]) * UM_PAGE_BYTES
+                                       + ref[3] * COLUMN_BYTES)
+    # within-capacity runs carry no UM counters at all
+    r_fit = simulate(SCENARIOS["llm_serve"].compile(n=5000),
+                     HMSConfig(footprint=t.footprint // 4))
+    assert "um_faults" not in r_fit.counters
+
+
+def test_unphased_traces_keep_scalar_um_counters():
+    t = _um_trace()
+    r = simulate(t, HMSConfig(footprint=t.footprint, organization="hbm",
+                              r_hbm=0.5))
+    assert r.phase_counters is None
+    assert r.counters["um_faults"] > 0
+
+
+def test_nvlink_fault_term_is_zero():
+    """Hardware-coherent links pay link occupancy, not fault stalls."""
+    t = _um_trace()
+    cfg = HMSConfig(footprint=t.footprint, organization="hbm", r_hbm=0.4)
+    r = simulate(t, cfg, nvlink=True)
+    assert r.terms["fault"] == 0.0
+    assert r.counters["um_remote_cols"] > 0
+    assert r.traffic_bytes["link"] > 0
+
+
+def test_hot_threshold_is_runtime_data():
+    """Sweeping the nvlink migration threshold reuses the compiled engine
+    and monotonically trades migrations for remote accesses."""
+    t = _um_trace()
+    base = HMSConfig(footprint=t.footprint, organization="hbm", r_hbm=0.4)
+    specs = [um.um_spec(dataclasses.replace(base, um_hot_threshold=h),
+                        nvlink=True) for h in (2, 4, 16)]
+    um.clear_um_results()
+    rs = um.simulate_um_many(t, specs)
+    migs = [r.migrated for r in rs]
+    rems = [r.remote_cols for r in rs]
+    assert migs[0] >= migs[1] >= migs[2]
+    assert rems[0] <= rems[1] <= rems[2]
