@@ -8,6 +8,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro import obs
 from repro.core import HMSConfig, make_trace, simulate_many
 
 # representative subset (full suite via REPRO_BENCH_FULL=1)
@@ -56,7 +57,8 @@ def sim_many(workload: str, cfg_kws):
     if missing:
         cfgs = [HMSConfig(footprint=t.footprint, **kw) for kw in missing]
         t0 = time.time()
-        rs = simulate_many(t, cfgs)
+        with obs.span("bench_point", workload=workload, configs=len(cfgs)):
+            rs = simulate_many(t, cfgs)
         per = (time.time() - t0) / len(rs)
         for kw, r in zip(missing, rs):
             r.wall_s = per
@@ -67,21 +69,13 @@ def sim_many(workload: str, cfg_kws):
 def host_metadata() -> Dict[str, object]:
     """Host descriptor embedded in benchmark JSON artifacts so wall-clock
     numbers (and the shard cost model behind them) are comparable across
-    machines: CPU count, platform, JAX version, and the measured
-    ``_STEP_COST_*`` constants + shard cap the engine selected shards with."""
-    import platform
-
-    import jax
-
+    machines: the obs identity block (platform, Python/JAX versions, git
+    SHA + dirty flag) plus the measured ``_STEP_COST_*`` constants and
+    shard cap the engine selected shards with."""
     from repro.core import simulator as sim_mod
 
     return {
-        "cpu_count": os.cpu_count(),
-        "platform": platform.platform(),
-        "machine": platform.machine(),
-        "python": platform.python_version(),
-        "jax": jax.__version__,
-        "jax_backend": jax.default_backend(),
+        **obs.host_metadata(),
         "step_cost_solo": sim_mod._STEP_COST_SOLO,
         "step_cost_overhead": sim_mod._STEP_OVERHEAD,
         "step_cost_lane": sim_mod._LANE_COST,

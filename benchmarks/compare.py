@@ -1,0 +1,142 @@
+"""Cross-run benchmark regression gate: diff two BENCH_*.json artifacts.
+
+Model outputs (counters, digests, hit rates, figure points) must be
+bit-for-bit identical across runs, hosts, and shard counts — the engines'
+parity tests guarantee that — so any difference in a *model* key is a
+regression and exits 1.  Wall-clock keys are host-dependent and only gate
+when ``--max-wall-regress PCT`` is given: a NEW timing more than PCT
+percent above OLD exits 2.  Host identity, shard-plan geometry and
+measured speedups vary legitimately across machines and are reported as
+informational only.
+
+    python -m benchmarks.compare OLD.json NEW.json [--max-wall-regress 50]
+
+Exit codes: 0 artifacts agree; 1 model-output drift; 2 timing regression;
+3 usage / unreadable input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Iterator, List, Optional, Tuple
+
+# key-path classification, checked on the *last* path component (and, for
+# INFO_SUBTREES, on any component)
+INFO_SUBTREES = ("host", "figures")      # identity / output paths
+TIMING_SUFFIXES = ("_s", "us_per_point", "us_per_call")
+INFO_MARKERS = ("shard", "speedup", "ts")
+INFO_SUFFIXES = ("depth",)
+
+
+def _classify(path: Tuple[str, ...]) -> str:
+    """'info' | 'timing' | 'model' for one leaf path."""
+    if any(p in INFO_SUBTREES for p in path):
+        return "info"
+    leaf = path[-1] if path else ""
+    if any(leaf.endswith(s) for s in TIMING_SUFFIXES):
+        return "timing"
+    if any(m in leaf for m in INFO_MARKERS) or \
+            any(leaf.endswith(s) for s in INFO_SUFFIXES):
+        return "info"
+    return "model"
+
+
+def _leaves(node, path=()) -> Iterator[Tuple[Tuple[str, ...], object]]:
+    if isinstance(node, dict):
+        for k in node:
+            yield from _leaves(node[k], path + (str(k),))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from _leaves(v, path + (f"[{i}]",))
+    else:
+        yield path, node
+
+
+def diff_artifacts(old: dict, new: dict,
+                   max_wall_regress: Optional[float] = None):
+    """Compare two artifact trees.  Returns (model_drift, timing_regress,
+    info_changes) — lists of human-readable difference lines."""
+    o = dict(_leaves(old))
+    n = dict(_leaves(new))
+    model: List[str] = []
+    timing: List[str] = []
+    info: List[str] = []
+    for path in sorted(set(o) | set(n), key=".".join):
+        kind = _classify(path)
+        name = ".".join(path)
+        if path not in o or path not in n:
+            which = "OLD" if path not in n else "NEW"
+            (info if kind != "model" else model).append(
+                f"{name}: only in {which}")
+            continue
+        ov, nv = o[path], n[path]
+        if ov == nv:
+            continue
+        if kind == "model":
+            model.append(f"{name}: {ov!r} != {nv!r}")
+        elif kind == "timing":
+            line = f"{name}: {ov} -> {nv}"
+            if (max_wall_regress is not None
+                    and isinstance(ov, (int, float))
+                    and isinstance(nv, (int, float))
+                    and nv > ov * (1.0 + max_wall_regress / 100.0)):
+                timing.append(line + f" (> +{max_wall_regress:g}%)")
+            else:
+                info.append(line)
+        else:
+            info.append(f"{name}: {ov!r} -> {nv!r}")
+    return model, timing, info
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.compare",
+        description="Diff two benchmark JSON artifacts; model-output "
+                    "drift fails, timing gates only with "
+                    "--max-wall-regress.")
+    ap.add_argument("old", help="baseline artifact (e.g. committed "
+                                "benchmarks/baselines/BENCH_sweep.json)")
+    ap.add_argument("new", help="freshly produced artifact")
+    ap.add_argument("--max-wall-regress", type=float, default=None,
+                    metavar="PCT",
+                    help="fail (exit 2) if a timing key regresses by more "
+                         "than PCT percent (default: timings informational)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress informational differences")
+    try:
+        args = ap.parse_args(argv)
+    except SystemExit:
+        return 3
+    try:
+        with open(args.old) as f:
+            old = json.load(f)
+        with open(args.new) as f:
+            new = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"compare: cannot read artifact: {e}", file=sys.stderr)
+        return 3
+
+    model, timing, info = diff_artifacts(old, new, args.max_wall_regress)
+    if info and not args.quiet:
+        for line in info:
+            print(f"  info   {line}")
+    for line in timing:
+        print(f"  TIMING {line}")
+    for line in model:
+        print(f"  DRIFT  {line}")
+    if model:
+        print(f"compare: FAIL — {len(model)} model-output difference(s)")
+        return 1
+    if timing:
+        print(f"compare: FAIL — {len(timing)} timing regression(s)")
+        return 2
+    print("compare: OK — model outputs identical"
+          + ("" if args.max_wall_regress is None
+             else f", timings within +{args.max_wall_regress:g}%"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -268,6 +268,7 @@ def sweep_design_space(results: Dict) -> List[tuple]:
     import os
     import time
 
+    from repro import obs
     from repro.core import HMSConfig, simulate, simulate_many
     from repro.core.simulator import (_engine_key, group_engine_key,
                                       set_max_shards)
@@ -319,6 +320,11 @@ def sweep_design_space(results: Dict) -> List[tuple]:
         detail[w] = {
             "points": len(grid),
             "n": bench_n(),
+            # bit-exact identity of the whole grid's counter output (stable
+            # across shard counts and hosts) + the per-point model outputs —
+            # what benchmarks.compare gates on
+            "counter_digest": obs.counter_digest([r.counters for r in rs]),
+            "point_runtime_cycles": [r.runtime_cycles for r in rs],
             "wall_s": wall_s,
             "compile_s": max(0.0, cold_s - wall_s),
             "us_per_point": wall_s / len(grid) * 1e6,

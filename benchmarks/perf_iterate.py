@@ -68,9 +68,10 @@ def hms_sweep(args):
     """Sequential vs batched execution of one design-space sweep."""
     import time
 
+    from repro import obs
     from repro.core import HMSConfig, make_trace, simulate, simulate_many
-    from repro.core.simulator import (engine_cache_size, engine_trace_count,
-                                      group_engine_key, set_max_shards)
+    from repro.core.simulator import (engine_trace_count, group_engine_key,
+                                      set_max_shards)
 
     t = make_trace(args.workload, n=args.n)
     grid = [{"tag_layout": lay, "ctc_fraction": frac, "scm_mode": mode}
@@ -87,7 +88,7 @@ def hms_sweep(args):
     bat = simulate_many(t, cfgs)
     out["batched_s"] = time.time() - t0
     out["speedup"] = out["sequential_s"] / max(out["batched_s"], 1e-9)
-    out["engines_compiled"] = engine_cache_size()
+    out["engines_compiled"] = obs.cache_stats()["hms_engines"]
     out["traces_for_sweep_key"] = engine_trace_count(group_engine_key(t, cfgs))
     drift = max(abs(a.runtime_cycles - b.runtime_cycles)
                 / max(a.runtime_cycles, 1.0) for a, b in zip(seq, bat))

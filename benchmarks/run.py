@@ -4,6 +4,11 @@ Prints ``name,us_per_call,derived`` CSV (us_per_call is simulator/kernel
 wall time where meaningful, 0.0 for derived-metric rows) and writes the full
 detail to benchmarks/artifacts/results.json.
 
+Every suite runs under ``obs.assert_no_retrace()`` — a warm engine
+silently recompiling mid-suite fails the run.  With ``REPRO_OBS_DIR`` set
+(or ``obs.enable``), the run also streams a per-engine-invocation JSONL
+ledger and exports a Chrome/Perfetto span trace next to it.
+
 Usage: PYTHONPATH=src python -m benchmarks.run [figure ...]
 """
 
@@ -16,6 +21,8 @@ import time
 
 
 def main() -> None:
+    from repro import obs
+
     from . import figures, kernel_bench, roofline, scenarios
     from . import um as um_bench
     from .common import emit
@@ -42,7 +49,8 @@ def main() -> None:
     t0 = time.time()
     print("name,us_per_call,derived")
     for name in want:
-        rows = suites[name](results)
+        with obs.assert_no_retrace(), obs.span("suite", suite=name):
+            rows = suites[name](results)
         emit(rows)
     art = os.path.join(os.path.dirname(__file__), "artifacts")
     os.makedirs(art, exist_ok=True)
@@ -50,6 +58,17 @@ def main() -> None:
         json.dump(results, f, indent=1, default=str)
     print(f"# total {time.time() - t0:.0f}s; "
           f"detail -> benchmarks/artifacts/results.json")
+    if obs.enabled():
+        split = obs.compile_split()
+        print(f"# obs: {split['runs']} engine runs "
+              f"({split['compiled_runs']} compiled, "
+              f"{split['compile_wall_s']:.1f}s compile / "
+              f"{split['warm_wall_s']:.1f}s warm)"
+              + (f"; ledger -> {obs.ledger_path()}"
+                 if obs.ledger_path() else ""))
+        out_dir = obs.obs_dir()
+        if out_dir:
+            print(f"# obs: trace -> {obs.export_trace(out_dir)}")
 
 
 if __name__ == "__main__":

@@ -110,6 +110,7 @@ def _figures(detail: Dict, art: str) -> List[str]:
 
 
 def run(results: Dict) -> List[tuple]:
+    from repro import obs
     from repro.core import HMSConfig, simulate_many
     from repro.workloads import SCENARIOS
 
@@ -124,10 +125,11 @@ def run(results: Dict) -> List[tuple]:
         t0 = time.time()
         for ov in OVERSUB_GRID:
             t = base if ov == 1.0 else scn.compile(n=n, oversub=ov)
-            hms, inf = simulate_many(t, [
-                HMSConfig(footprint=cfg_fp),
-                HMSConfig(footprint=cfg_fp, organization="inf_hbm"),
-            ])
+            with obs.span("scenario_point", scenario=name, oversub=ov):
+                hms, inf = simulate_many(t, [
+                    HMSConfig(footprint=cfg_fp),
+                    HMSConfig(footprint=cfg_fp, organization="inf_hbm"),
+                ])
             sweep.append({
                 "oversub": ov,
                 "footprint_bytes": t.footprint,

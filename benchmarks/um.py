@@ -38,7 +38,7 @@ UM_WORKLOADS = ("moe_expert", "bfs_tu")
 
 
 def run(results: Dict) -> List[tuple]:
-    from repro import um
+    from repro import obs, um
     from repro.core import HMSConfig
     from repro.um._reference import run_um_reference
 
@@ -53,21 +53,27 @@ def run(results: Dict) -> List[tuple]:
         specs = [um.um_spec(cfg, nvlink=nv)
                  for (rel, nv), cfg in cfgs.items()]
 
-        um.clear_um_caches()
+        # deliberate cold start: obs.reset also forgets the sentinel
+        # history, so the recompile below is expected, not a retrace
+        obs.reset(hms=False)
         t0 = time.time()
-        rs = um.simulate_um_many(t, specs)
+        with obs.span("um_cold", workload=w):
+            rs = um.simulate_um_many(t, specs)
         cold_s = time.time() - t0
-        assert um.um_engine_cache_size() == 1, "grid split engine entries"
+        assert obs.cache_stats()["um_engines"] == 1, \
+            "grid split engine entries"
 
-        um.clear_um_results()
+        obs.reset(hms=False, keep_compiled=True)
         t0 = time.time()
-        rs = um.simulate_um_many(t, specs)
+        with obs.span("um_warm", workload=w):
+            rs = um.simulate_um_many(t, specs)
         warm_s = time.time() - t0
 
         # the frozen loop: one re-traced sequential scan per point
         t0 = time.time()
-        refs = [run_um_reference(t, cfg, nvlink=nv)
-                for (rel, nv), cfg in cfgs.items()]
+        with obs.span("um_reference", workload=w):
+            refs = [run_um_reference(t, cfg, nvlink=nv)
+                    for (rel, nv), cfg in cfgs.items()]
         ref_s = time.time() - t0
         for (key, r, ref) in zip(cfgs, rs, refs):
             got = (r.faults, r.migrated, r.writebacks, r.remote_cols)
@@ -88,7 +94,7 @@ def run(results: Dict) -> List[tuple]:
             "footprint_bytes": t.footprint,
             "points": points,
             "grid_points": len(specs),
-            "engine_entries": um.um_engine_cache_size(),
+            "engine_entries": obs.cache_stats()["um_engines"],
             "cold_s": cold_s,
             "warm_s": warm_s,
             "compile_s": max(0.0, cold_s - warm_s),

@@ -77,7 +77,9 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+import time
 import types
+import warnings
 from typing import Dict, List, Sequence
 
 import jax
@@ -86,6 +88,8 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 from . import bypass as bp
 from . import ctc as ctc_mod
@@ -711,8 +715,9 @@ def group_engine_key(trace: Trace, configs: Sequence[HMSConfig]) -> _EngineKey:
     assert len(policies) == 1 and len(sectors) == 1, (
         "group_engine_key wants configs from one static-structure group")
     policy = policies.pop()
-    shards = _select_shards(trace, cfgs, len(cfgs))
-    plans = [shard_plan(trace, c, shards) for c in cfgs]
+    with obs.span("shard_plan", policy=policy, configs=len(cfgs)):
+        shards = _select_shards(trace, cfgs, len(cfgs))
+        plans = [shard_plan(trace, c, shards) for c in cfgs]
     use_ctc = policy in _USES_CTC
     return _EngineKey(
         policy=policy,
@@ -730,22 +735,54 @@ def group_engine_key(trace: Trace, configs: Sequence[HMSConfig]) -> _EngineKey:
     )
 
 
+def _fingerprint(key: _EngineKey, width: int) -> str:
+    """Sentinel/ledger fingerprint of one compiled unit: the static engine
+    key plus the vmap batch width (the batched jit re-specializes per
+    width, so width is part of what 'one compile' means)."""
+    return (f"hms:{key.policy}:n{key.n}:s{key.shards}x{key.depth}"
+            f":L{key.lines_alloc}:C{key.ctc_sets_alloc}x{key.ctc_ways_alloc}"
+            f"x{key.ctc_sectors}:p{key.phases}:w{width}")
+
+
+def _obs_hms_record(entry: str, trace: Trace, key: _EngineKey, width: int,
+                    compiled: bool, wall_s: float, digest: str) -> None:
+    """Build + emit one HMS ledger record (caller gates on obs.enabled())."""
+    obs.record(obs.RunRecord(
+        entry=entry, engine="hms", trace=trace.name, n=trace.n,
+        phases=key.phases, engine_key=_fingerprint(key, width),
+        compiled=compiled, wall_s=wall_s, batch=width,
+        counter_digest=digest, shards=key.shards, depth=key.depth,
+        load_imbalance=key.shards * key.depth / max(1, key.n),
+        host=obs.host_metadata(), **obs.git_info()))
+
+
 def engine_cache_size() -> int:
+    """Deprecated: use ``obs.cache_stats()["hms_engines"]``."""
+    warnings.warn(
+        "simulator.engine_cache_size is deprecated; use "
+        "repro.obs.cache_stats()['hms_engines']",
+        DeprecationWarning, stacklevel=2)
     return len(_ENGINE_CACHE)
 
 
 def clear_engine_cache() -> None:
-    _ENGINE_CACHE.clear()
-    _BATCHED_CACHE.clear()
-    _TRACE_COUNTS.clear()
+    """Deprecated: use ``obs.reset(um=False)``."""
+    warnings.warn(
+        "simulator.clear_engine_cache is deprecated; use "
+        "repro.obs.reset(um=False)",
+        DeprecationWarning, stacklevel=2)
+    obs.reset(um=False)
 
 
 def _counting(key: _EngineKey):
     base = _make_engine(key)
 
     def fn(xs, p):
+        # body runs only when jit (re-)traces, so the span measures trace
+        # (staging) time and the count increments once per compile
         _TRACE_COUNTS[key] = _TRACE_COUNTS.get(key, 0) + 1
-        return base(xs, p)
+        with obs.span("compile", engine="hms", policy=key.policy):
+            return base(xs, p)
 
     return fn
 
@@ -775,14 +812,26 @@ def _local_sets(trace: Trace, cfg: HMSConfig, key: _EngineKey) -> int:
 
 
 def _run_hms_scan(trace: Trace, cfg: HMSConfig, pre,
-                  key: _EngineKey | None = None) -> Dict[str, np.ndarray]:
+                  key: _EngineKey | None = None,
+                  entry: str = "simulate") -> Dict[str, np.ndarray]:
     if key is None:
         key = _engine_key(trace, cfg)
     fn = _engine_for(key)
-    C = fn(_engine_inputs(trace, cfg, pre, key.shards, key.depth),
-           _runtime_params(cfg, _local_sets(trace, cfg, key)))
-    # scalar (unphased) or (n_phases,) vector (phased) per counter
-    return {k: np.asarray(v, np.float64) for k, v in C.items()}
+    before = _TRACE_COUNTS.get(key, 0)
+    t0 = time.perf_counter()
+    with obs.span("scan", engine="hms", policy=key.policy,
+                  shards=key.shards, batch=1):
+        C = fn(_engine_inputs(trace, cfg, pre, key.shards, key.depth),
+               _runtime_params(cfg, _local_sets(trace, cfg, key)))
+        # scalar (unphased) or (n_phases,) vector (phased) per counter
+        C = {k: np.asarray(v, np.float64) for k, v in C.items()}
+    wall = time.perf_counter() - t0
+    compiled = _TRACE_COUNTS.get(key, 0) > before
+    obs.engine_run(_fingerprint(key, 1), compiled)
+    if obs.enabled():
+        _obs_hms_record(entry, trace, key, 1, compiled, wall,
+                        obs.counter_digest(C))
+    return C
 
 
 # ---------------------------------------------------------------------------
@@ -995,32 +1044,53 @@ def _finish_hms(trace: Trace, cfg: HMSConfig, C: Dict[str, float],
 
 def simulate(trace: Trace, cfg: HMSConfig, nvlink: bool = False) -> SimResult:
     """Simulate ``trace`` on the memory system described by ``cfg``."""
+    return _simulate(trace, cfg, nvlink, "simulate")
+
+
+def _single_tier_record(entry: str, trace: Trace, cfg: HMSConfig,
+                        C, wall_s: float) -> None:
+    obs.record(obs.RunRecord(
+        entry=entry, engine="single_tier", trace=trace.name, n=trace.n,
+        phases=trace.n_phases,
+        engine_key=f"single_tier:{cfg.organization}:n{trace.n}",
+        compiled=False, wall_s=wall_s, batch=1,
+        counter_digest=obs.counter_digest(C),
+        host=obs.host_metadata(), **obs.git_info()))
+
+
+def _simulate(trace: Trace, cfg: HMSConfig, nvlink: bool,
+              entry: str) -> SimResult:
     cfg = cfg.validate()
     org = cfg.organization
 
-    if org == "inf_hbm":
-        C = _single_tier_counters(trace, cfg, cfg.dram_timing)
+    if org in ("inf_hbm", "scm", "hbm"):
+        t0 = time.perf_counter()
+        device = cfg.dram_timing if org != "scm" else cfg.scm_timing
+        with obs.span("single_tier", organization=org, trace=trace.name):
+            C = _single_tier_counters(trace, cfg, device)
+        if org == "hbm":
+            # Oversubscribed HBM + UM over the host link (batched engine;
+            # it emits its own "um" ledger record).
+            um = _um.simulate_um(trace, cfg, nvlink=nvlink)
+            if obs.enabled():
+                _single_tier_record(entry, trace, cfg, C,
+                                    time.perf_counter() - t0)
+            return _finish(trace.name, cfg, C, link_bytes=um.link_bytes,
+                           fault_cycles=_um_fault_cycles(um, cfg, nvlink),
+                           n_requests=trace.n,
+                           phase_names=trace.phase_names, um=um)
+        if obs.enabled():
+            _single_tier_record(entry, trace, cfg, C,
+                                time.perf_counter() - t0)
         return _finish(trace.name, cfg, C, n_requests=trace.n,
                        phase_names=trace.phase_names)
-
-    if org == "scm":
-        C = _single_tier_counters(trace, cfg, cfg.scm_timing)
-        return _finish(trace.name, cfg, C, n_requests=trace.n,
-                       phase_names=trace.phase_names)
-
-    if org == "hbm":
-        # Oversubscribed HBM + UM over the host link (batched engine).
-        C = _single_tier_counters(trace, cfg, cfg.dram_timing)
-        um = _um.simulate_um(trace, cfg, nvlink=nvlink)
-        return _finish(trace.name, cfg, C, link_bytes=um.link_bytes,
-                       fault_cycles=_um_fault_cycles(um, cfg, nvlink),
-                       n_requests=trace.n,
-                       phase_names=trace.phase_names, um=um)
 
     # hms / separate
-    pre = preprocess(trace, cfg)
-    C = _run_hms_scan(trace, cfg, pre)
-    return _finish_hms(trace, cfg, C, nvlink)
+    with obs.span("preprocess", trace=trace.name):
+        pre = preprocess(trace, cfg)
+    C = _run_hms_scan(trace, cfg, pre, entry=entry)
+    with obs.span("postprocess", trace=trace.name):
+        return _finish_hms(trace, cfg, C, nvlink)
 
 
 def simulate_many(trace: Trace, configs: Sequence[HMSConfig],
@@ -1060,30 +1130,48 @@ def simulate_many(trace: Trace, configs: Sequence[HMSConfig],
             groups.setdefault(
                 (cfg.policy, cfg.ctc_sectors_per_line), []).append(i)
         else:
-            results[i] = simulate(trace, cfg, nvlink=nvlink)
+            results[i] = _simulate(trace, cfg, nvlink, "simulate_many")
 
     for (policy, sectors), idxs in groups.items():
         key = group_engine_key(trace, [configs[i] for i in idxs])
         if len(idxs) == 1:
             i = idxs[0]
             C = _run_hms_scan(trace, configs[i],
-                              preprocess(trace, configs[i]), key)
+                              preprocess(trace, configs[i]), key,
+                              entry="simulate_many")
             results[i] = _finish_hms(trace, configs[i], C, nvlink)
             continue
-        xs_list = [_engine_inputs(trace, configs[i],
-                                  preprocess(trace, configs[i]),
-                                  key.shards, key.depth)
-                   for i in idxs]
-        xs = {k: np.stack([x[k] for x in xs_list]) for k in xs_list[0]}
-        params_list = [_runtime_params(
-            configs[i], _local_sets(trace, configs[i], key)) for i in idxs]
-        params = {k: np.stack([p[k] for p in params_list])
-                  for k in params_list[0]}
+        with obs.span("preprocess", trace=trace.name, batch=len(idxs)):
+            xs_list = [_engine_inputs(trace, configs[i],
+                                      preprocess(trace, configs[i]),
+                                      key.shards, key.depth)
+                       for i in idxs]
+            xs = {k: np.stack([x[k] for x in xs_list]) for k in xs_list[0]}
+            params_list = [_runtime_params(
+                configs[i], _local_sets(trace, configs[i], key))
+                for i in idxs]
+            params = {k: np.stack([p[k] for p in params_list])
+                      for k in params_list[0]}
         fn = _batched_engine_for(key)
-        Cs = fn(xs, params)
-        for j, i in enumerate(idxs):
-            C = {k: np.asarray(v[j], np.float64) for k, v in Cs.items()}
-            results[i] = _finish_hms(trace, configs[i], C, nvlink)
+        before = _TRACE_COUNTS.get(key, 0)
+        t0 = time.perf_counter()
+        with obs.span("scan", engine="hms", policy=key.policy,
+                      shards=key.shards, batch=len(idxs)):
+            Cs = fn(xs, params)
+            Cs = {k: np.asarray(v, np.float64) for k, v in Cs.items()}
+        wall = time.perf_counter() - t0
+        compiled = _TRACE_COUNTS.get(key, 0) > before
+        obs.engine_run(_fingerprint(key, len(idxs)), compiled)
+        if obs.enabled():
+            _obs_hms_record(
+                "simulate_many", trace, key, len(idxs), compiled, wall,
+                obs.counter_digest([{k: v[j] for k, v in Cs.items()}
+                                    for j in range(len(idxs))]))
+        with obs.span("postprocess", trace=trace.name, batch=len(idxs)):
+            for j, i in enumerate(idxs):
+                C = {k: np.asarray(v[j], np.float64)
+                     for k, v in Cs.items()}
+                results[i] = _finish_hms(trace, configs[i], C, nvlink)
 
     return results
 

@@ -1,0 +1,88 @@
+"""Engine telemetry: run ledger, span tracing, and the retrace sentinel.
+
+One facade over everything observable about the simulation engines:
+
+* **Run ledger** (:mod:`.ledger`) — every ``simulate`` /
+  ``simulate_many`` / ``simulate_um_many`` engine execution emits a
+  :class:`RunRecord` (engine-key fingerprint, compile-vs-cache-hit, shard
+  plan, batch width, UM dedupe accounting, wall time, a bit-exact counter
+  digest, git SHA + host metadata).  Off by default; ``enable(path)`` or
+  the ``REPRO_OBS_DIR`` env var streams records to JSONL.
+* **Span tracer** (:mod:`.spans`) — ``span("preprocess")`` etc. through
+  the engines and benchmark suites, exportable to Chrome/Perfetto
+  trace-event JSON via :func:`export_trace`.
+* **Retrace sentinel** (:mod:`.sentinel`) — ``cache_stats()`` /
+  ``reset()`` / ``assert_no_retrace()`` promote the engines' scattered
+  jit-cache counters into one contract: a warm engine must never silently
+  recompile.
+
+The package imports nothing from ``repro.core`` / ``repro.um`` at module
+level (the engines import *us*); sentinel and stats reach into them
+lazily at call time.
+"""
+
+from __future__ import annotations
+
+import os as _os
+
+from .hostinfo import git_info, host_metadata
+from .ledger import (
+    RunRecord,
+    clear_records,
+    compile_split,
+    counter_digest,
+    disable as _ledger_disable,
+    enable as _ledger_enable,
+    enabled,
+    ledger_path,
+    load_ledger,
+    obs_dir,
+    record,
+    records,
+)
+from .sentinel import (
+    RetraceError,
+    assert_no_retrace,
+    cache_stats,
+    engine_run,
+    engine_runs,
+    reset,
+)
+from .spans import clear_events, events, export_trace, span
+from .spans import set_enabled as _spans_set_enabled
+
+
+def enable(path=None) -> None:
+    """Turn the ledger *and* span collection on (``path``: directory,
+    ``*.jsonl`` file, or None for in-memory only)."""
+    _ledger_enable(path)
+    _spans_set_enabled(True)
+
+
+def disable() -> None:
+    """Stop collecting records and spans (already-collected data stays
+    until :func:`clear_records` / :func:`clear_events`)."""
+    _ledger_disable()
+    _spans_set_enabled(False)
+
+
+# REPRO_OBS_DIR in the environment enables streaming for the whole process
+# — the benchmark CLIs (and anything else importing repro) inherit it.
+_env_dir = _os.environ.get("REPRO_OBS_DIR")
+if _env_dir:
+    enable(_env_dir)
+del _env_dir
+
+__all__ = [
+    # ledger
+    "RunRecord", "enable", "disable", "enabled", "record", "records",
+    "clear_records", "load_ledger", "ledger_path", "obs_dir",
+    "counter_digest", "compile_split",
+    # spans
+    "span", "events", "clear_events", "export_trace",
+    # sentinel
+    "cache_stats", "reset", "assert_no_retrace", "RetraceError",
+    "engine_run", "engine_runs",
+    # identity
+    "host_metadata", "git_info",
+]

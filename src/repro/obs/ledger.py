@@ -1,0 +1,206 @@
+"""Run ledger: one structured :class:`RunRecord` per engine invocation.
+
+The ledger is the "bronze" layer of the results store the ROADMAP calls
+for: raw, append-only, per-run records with enough identity (engine-key
+fingerprint, git SHA, host metadata, counter digest) to diff any two runs
+— across shard counts, hosts, and PRs.
+
+Lifecycle: disabled by default (record emission costs one ``enabled()``
+check on the engine paths and nothing else).  ``enable(path)`` — or the
+``REPRO_OBS_DIR`` environment variable at import — turns collection on:
+records accumulate in an in-process registry and, when a path is given,
+stream to a JSONL file one line per record (flushed per line, so a crashed
+run keeps its ledger).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+SCHEMA_VERSION = 1
+
+
+def counter_digest(counters) -> str:
+    """Stable 64-bit hex digest of a counter vector (or an ordered sequence
+    of counter dicts, e.g. one per batched config lane).
+
+    Keys are sorted, values are hashed as raw float64 bytes, so the digest
+    is exactly as strict as the engines' bit-for-bit parity guarantees: the
+    same trace + config produces the same digest regardless of shard count,
+    batch width, or host — and any counter drift changes it.
+    """
+    h = hashlib.sha256()
+    if isinstance(counters, Mapping):
+        counters = [counters]
+    for c in counters:
+        for k in sorted(c):
+            h.update(k.encode())
+            h.update(np.ascontiguousarray(
+                np.asarray(c[k], np.float64)).tobytes())
+    return h.hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class RunRecord:
+    """One engine invocation, as the ledger sees it.
+
+    ``engine_key`` is the static-structure fingerprint *including the vmap
+    batch width* — the unit at which the jit cache compiles — so
+    ``compiled`` is meaningful per record.  ``counter_digest`` hashes the
+    engine's raw counter output (see :func:`counter_digest`); equal digests
+    across runs mean bit-for-bit equal counters.
+    """
+
+    entry: str                      # public API: simulate / simulate_many /
+                                    # simulate_um_many
+    engine: str                     # "hms" | "um" | "single_tier"
+    trace: str                      # trace name
+    n: int                          # trace length (requests)
+    phases: int                     # counter segments
+    engine_key: str                 # static-structure fingerprint + width
+    compiled: bool                  # this call traced/compiled the engine
+    wall_s: float                   # wall of the engine call (incl compile)
+    batch: int                      # config lanes vmapped in this call
+    counter_digest: str
+    # HMS shard plan (None for um / single_tier records)
+    shards: Optional[int] = None
+    depth: Optional[int] = None     # padded per-shard scan length
+    load_imbalance: Optional[float] = None  # shards*depth/n; 1.0 = perfect LPT
+    # UM dedupe accounting (None for hms / single_tier records)
+    um_lanes_requested: Optional[int] = None
+    um_lanes_run: Optional[int] = None
+    um_lanes_deduped: Optional[int] = None
+    # run identity
+    git_sha: Optional[str] = None
+    git_dirty: Optional[bool] = None
+    ts: float = 0.0                 # unix time at completion
+    host: Dict[str, object] = dataclasses.field(default_factory=dict)
+    schema: int = SCHEMA_VERSION
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, object]) -> "RunRecord":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+
+# ---------------------------------------------------------------------------
+# Registry + optional JSONL stream.
+# ---------------------------------------------------------------------------
+
+_RECORDS: List[RunRecord] = []
+_ENABLED = False
+_STREAM = None          # open file object, line-flushed
+_DIR: Optional[str] = None
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+def obs_dir() -> Optional[str]:
+    """The directory artifacts (ledger, trace export) land in, if any."""
+    return _DIR
+
+
+def ledger_path() -> Optional[str]:
+    return _STREAM.name if _STREAM is not None else None
+
+
+def enable(path: Optional[str] = None) -> None:
+    """Turn the ledger on.  ``path`` may be a directory (records stream to
+    ``<path>/ledger.jsonl``), a ``*.jsonl`` file, or ``None`` for in-memory
+    collection only.  Idempotent; re-enabling with a new path re-targets
+    the stream."""
+    global _ENABLED, _STREAM, _DIR
+    if _STREAM is not None:
+        _STREAM.close()
+        _STREAM = None
+    if path is not None:
+        path = str(path)
+        if path.endswith(".jsonl"):
+            parent = os.path.dirname(path) or "."
+            os.makedirs(parent, exist_ok=True)
+            _DIR = parent
+            _STREAM = open(path, "a")
+        else:
+            os.makedirs(path, exist_ok=True)
+            _DIR = path
+            _STREAM = open(os.path.join(path, "ledger.jsonl"), "a")
+    else:
+        _DIR = None
+    _ENABLED = True
+
+
+def disable() -> None:
+    """Stop collecting (records already taken are kept; see
+    :func:`clear_records`)."""
+    global _ENABLED, _STREAM, _DIR
+    if _STREAM is not None:
+        _STREAM.close()
+        _STREAM = None
+    _DIR = None
+    _ENABLED = False
+
+
+def record(rec: RunRecord) -> None:
+    """Append one record to the registry (and the JSONL stream, if any).
+    Callers gate on :func:`enabled` so building the record itself is
+    skipped when the ledger is off."""
+    if not _ENABLED:
+        return
+    if not rec.ts:
+        rec.ts = time.time()
+    _RECORDS.append(rec)
+    if _STREAM is not None:
+        _STREAM.write(json.dumps(rec.to_dict(), default=str) + "\n")
+        _STREAM.flush()
+
+
+def records() -> List[RunRecord]:
+    """Snapshot of the in-process registry (a copy; mutate freely)."""
+    return list(_RECORDS)
+
+
+def clear_records() -> None:
+    _RECORDS.clear()
+
+
+def load_ledger(path: str) -> List[RunRecord]:
+    """Read a JSONL ledger back into :class:`RunRecord` objects."""
+    if os.path.isdir(path):
+        path = os.path.join(path, "ledger.jsonl")
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(RunRecord.from_dict(json.loads(line)))
+    return out
+
+
+def compile_split(recs: Optional[Sequence[RunRecord]] = None
+                  ) -> Dict[str, float]:
+    """Wall-clock attribution over a set of records: total wall, the share
+    spent in calls that compiled, and the share served from the jit cache —
+    the ledger-level equivalent of the benchmarks' cold/warm split."""
+    if recs is None:
+        recs = _RECORDS
+    compile_s = sum(r.wall_s for r in recs if r.compiled)
+    warm_s = sum(r.wall_s for r in recs if not r.compiled)
+    return {
+        "runs": len(recs),
+        "compiled_runs": sum(1 for r in recs if r.compiled),
+        "wall_s": compile_s + warm_s,
+        "compile_wall_s": compile_s,
+        "warm_wall_s": warm_s,
+    }

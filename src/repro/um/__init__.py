@@ -9,6 +9,13 @@ through the same scan.  The seed formulation is frozen in
 ``repro.um._reference`` and ``tests/test_um_engine.py`` pins the engine to
 it on all four outputs (faults / migrated pages / writeback pages / remote
 columns) in both link modes.
+
+Cache accounting lives in the ``repro.obs`` facade now:
+``obs.cache_stats()`` / ``obs.reset(hms=False, ...)`` replace the
+deprecated ``um_engine_cache_size`` / ``um_lanes_run`` /
+``clear_um_caches`` / ``clear_um_results`` shims kept below, and every
+``simulate_um_many`` call emits a ledger :class:`repro.obs.RunRecord`
+with its lane dedupe accounting when observability is enabled.
 """
 
 from .engine import (

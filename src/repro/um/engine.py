@@ -36,6 +36,8 @@ slots that no live index ever reads).
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 import weakref
 from typing import Dict, List, Sequence
 
@@ -46,6 +48,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.timing import COLUMN_BYTES, UM_PAGE_BYTES, HMSConfig
 from repro.core.traces import Trace
 
@@ -280,8 +283,9 @@ _PAGE_CACHE: "weakref.WeakKeyDictionary[Trace, tuple]" = \
     weakref.WeakKeyDictionary()
 
 
-def um_engine_cache_size() -> int:
-    return len(_UM_ENGINE_CACHE)
+def _fingerprint(key: _UMKey, width: int) -> str:
+    return (f"um:n{key.n}:P{key.pages_alloc}:F{key.frames_alloc}"
+            f":c{key.chunk_alloc}:p{key.phases}:w{width}")
 
 
 def um_engine_trace_count(key: _UMKey) -> int:
@@ -289,22 +293,41 @@ def um_engine_trace_count(key: _UMKey) -> int:
     return _UM_TRACE_COUNTS.get(key, 0)
 
 
+# -- deprecated shims (PR 6): the obs facade owns this accounting now ------
+
+def um_engine_cache_size() -> int:
+    """Deprecated: use ``obs.cache_stats()["um_engines"]``."""
+    warnings.warn(
+        "um_engine_cache_size() is deprecated; use "
+        "repro.obs.cache_stats()['um_engines']",
+        DeprecationWarning, stacklevel=2)
+    return len(_UM_ENGINE_CACHE)
+
+
 def um_lanes_run() -> int:
-    """Total engine lanes executed (one per non-cached, non-early-out spec)
-    since process start — the dedupe tests assert on its deltas."""
+    """Deprecated: use ``obs.cache_stats()["um_lanes_run"]``."""
+    warnings.warn(
+        "um_lanes_run() is deprecated; use "
+        "repro.obs.cache_stats()['um_lanes_run']",
+        DeprecationWarning, stacklevel=2)
     return _LANES_RUN
 
 
 def clear_um_results() -> None:
-    """Drop memoized per-trace results but keep compiled engines — warm
-    re-timing in benchmarks uses this split."""
-    _RESULT_CACHE.clear()
+    """Deprecated: use ``obs.reset(hms=False, keep_compiled=True)``."""
+    warnings.warn(
+        "clear_um_results() is deprecated; use "
+        "repro.obs.reset(hms=False, keep_compiled=True)",
+        DeprecationWarning, stacklevel=2)
+    obs.reset(hms=False, keep_compiled=True)
 
 
 def clear_um_caches() -> None:
-    _UM_ENGINE_CACHE.clear()
-    _UM_TRACE_COUNTS.clear()
-    clear_um_results()
+    """Deprecated: use ``obs.reset(hms=False)``."""
+    warnings.warn(
+        "clear_um_caches() is deprecated; use repro.obs.reset(hms=False)",
+        DeprecationWarning, stacklevel=2)
+    obs.reset(hms=False)
 
 
 def _engine_for(key: _UMKey):
@@ -312,8 +335,10 @@ def _engine_for(key: _UMKey):
         base = _make_um_engine(key)
 
         def counting(xs, p):
+            # runs once per jit (re-)trace; the span measures staging time
             _UM_TRACE_COUNTS[key] = _UM_TRACE_COUNTS.get(key, 0) + 1
-            return base(xs, p)
+            with obs.span("compile", engine="um"):
+                return base(xs, p)
 
         # one vmapped engine for every batch width; jit re-specializes per
         # width on its own (same pattern as the HMS batched engine)
@@ -354,6 +379,7 @@ def simulate_um_many(trace: Trace, specs: Sequence[UMSpec]) -> List[UMResult]:
     zero counters without touching the device.  Results come back in input
     order and match the frozen sequential reference exactly."""
     global _LANES_RUN
+    t_start = time.perf_counter()
     specs = list(specs)
     cache = _RESULT_CACHE.setdefault(trace, {})
     page, n_pages = _page_stream(trace)
@@ -369,6 +395,8 @@ def simulate_um_many(trace: Trace, specs: Sequence[UMSpec]) -> List[UMResult]:
         else:
             run_specs.append(s)
 
+    key = None
+    compiled = False
     if run_specs:
         key = um_group_key(trace, run_specs)
         fn = _engine_for(key)
@@ -389,18 +417,43 @@ def simulate_um_many(trace: Trace, specs: Sequence[UMSpec]) -> List[UMResult]:
             "hot_thresh": np.asarray([s.hot_thresh for s in run_specs],
                                      np.int32),
         }
-        Cs = fn(xs, p)
+        before = _UM_TRACE_COUNTS.get(key, 0)
+        with obs.span("um_scan", engine="um", lanes=len(run_specs),
+                      trace=trace.name):
+            Cs = fn(xs, p)
+            Cs = {k: np.asarray(v, np.float64) for k, v in Cs.items()}
+        compiled = _UM_TRACE_COUNTS.get(key, 0) > before
+        obs.engine_run(_fingerprint(key, len(run_specs)), compiled)
         _LANES_RUN += len(run_specs)
         for j, s in enumerate(run_specs):
             cache[s] = UMResult(
                 s,
-                np.asarray(Cs["um_faults"][j], np.float64),
-                np.asarray(Cs["um_migrated"][j], np.float64),
-                np.asarray(Cs["um_writebacks"][j], np.float64),
-                np.asarray(Cs["um_remote_cols"][j], np.float64),
+                Cs["um_faults"][j],
+                Cs["um_migrated"][j],
+                Cs["um_writebacks"][j],
+                Cs["um_remote_cols"][j],
             )
 
-    return [cache[s] for s in specs]
+    out = [cache[s] for s in specs]
+    if obs.enabled():
+        obs.record(obs.RunRecord(
+            entry="simulate_um_many", engine="um", trace=trace.name,
+            n=trace.n, phases=n_ph,
+            engine_key=(_fingerprint(key, len(run_specs))
+                        if key is not None else "um:memoized"),
+            compiled=compiled, wall_s=time.perf_counter() - t_start,
+            batch=len(run_specs),
+            counter_digest=obs.counter_digest([{
+                "um_faults": r.phase_faults,
+                "um_migrated": r.phase_migrated,
+                "um_writebacks": r.phase_writebacks,
+                "um_remote_cols": r.phase_remote_cols,
+            } for r in out]),
+            um_lanes_requested=len(specs),
+            um_lanes_run=len(run_specs),
+            um_lanes_deduped=len(specs) - len(run_specs),
+            host=obs.host_metadata(), **obs.git_info()))
+    return out
 
 
 def simulate_um(trace: Trace, cfg: HMSConfig,

@@ -11,6 +11,7 @@ import dataclasses
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import HMSConfig, simulate, simulate_many
 from repro.core._reference import reference_counters
 from repro.core.simulator import (_COUNTERS, _engine_key, engine_trace_count,
@@ -76,10 +77,11 @@ def test_runtime_scalar_sweep_compiles_once():
         {"use_activation_counter": True},
         {"organization": "separate"},
     )
-    for kw in sweeps:
-        cfg = dataclasses.replace(base, **kw).validate()
-        assert _engine_key(t, cfg) == key, f"{kw} changed the static key"
-        simulate(t, cfg)
+    with obs.assert_no_retrace():      # key is warm at entry
+        for kw in sweeps:
+            cfg = dataclasses.replace(base, **kw).validate()
+            assert _engine_key(t, cfg) == key, f"{kw} changed the static key"
+            simulate(t, cfg)
     assert engine_trace_count(key) == warm, (
         "runtime-scalar sweep re-traced the engine")
 

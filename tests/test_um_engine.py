@@ -13,7 +13,7 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro import um
+from repro import obs, um
 from repro.core import HMSConfig, make_trace, simulate, simulate_many
 from repro.core.simulator import _um_overflow_config
 from repro.core.timing import COLUMN_BYTES, UM_PAGE_BYTES
@@ -79,10 +79,10 @@ def test_early_out_when_frames_cover_pages():
     """n_frames >= n_pages: zero counters, no engine lane executed."""
     t = _um_trace()
     cfg = HMSConfig(footprint=t.footprint, r_hbm=1.5, organization="hbm")
-    before = um.um_lanes_run()
+    before = obs.cache_stats()["um_lanes_run"]
     r = um.simulate_um(t, cfg)
     assert _totals(r) == (0.0, 0.0, 0.0, 0.0)
-    assert um.um_lanes_run() == before
+    assert obs.cache_stats()["um_lanes_run"] == before
     assert run_um_reference(t, cfg) == (0, 0, 0, 0)
 
 
@@ -106,11 +106,11 @@ def test_rel_footprint_sweep_is_one_engine_entry():
     specs = [um.um_spec(HMSConfig(footprint=t.footprint, r_hbm=1.0 / rel),
                         nvlink=nv)
              for rel in (1.25, 1.5, 2.0, 4.0) for nv in (False, True)]
-    um.clear_um_caches()
+    obs.reset(hms=False)
     batched = um.simulate_um_many(t, specs)
-    assert um.um_engine_cache_size() == 1
+    assert obs.cache_stats()["um_engines"] == 1
     assert um.um_engine_trace_count(um.um_group_key(t, specs)) == 1
-    um.clear_um_caches()
+    obs.reset(hms=False)
     for s, rb in zip(specs, batched):
         rs = um.simulate_um_many(t, [s])[0]
         assert _totals(rb) == _totals(rs), s
@@ -123,7 +123,7 @@ def test_runtime_scalar_resweep_never_retraces():
     scalars only; jit re-specializes per batch width like the HMS
     engine's batched variant)."""
     t = _um_trace()
-    um.clear_um_caches()
+    obs.reset(hms=False)
     specs_a = [um.um_spec(HMSConfig(footprint=t.footprint, r_hbm=r))
                for r in (0.50, 0.55, 0.60)]
     um.simulate_um_many(t, specs_a)
@@ -133,7 +133,8 @@ def test_runtime_scalar_resweep_never_retraces():
                                     um_prefetch_pages=c))
                for r, c in ((0.52, 4), (0.58, 2), (0.61, 3))]
     assert um.um_group_key(t, specs_b) == key
-    um.simulate_um_many(t, specs_b)
+    with obs.assert_no_retrace():      # same fingerprint, warm at entry
+        um.simulate_um_many(t, specs_b)
     assert um.um_engine_trace_count(key) == warm, "re-sweep re-traced"
 
 
@@ -145,15 +146,15 @@ def test_simulate_many_dedupes_identical_um_points():
     cfgs = [HMSConfig(r_hbm=0.5, **kw),
             HMSConfig(r_hbm=0.5, scm_mode="slc", **kw),   # same UM spec
             HMSConfig(r_hbm=0.4, **kw)]
-    before = um.um_lanes_run()
+    before = obs.cache_stats()["um_lanes_run"]
     rs = simulate_many(t, cfgs)
-    assert um.um_lanes_run() - before == 2
+    assert obs.cache_stats()["um_lanes_run"] - before == 2
     for k in UM_KEYS:
         assert rs[0].counters[k] == rs[1].counters[k]
     # the memoized point is also shared by later sequential calls
-    before = um.um_lanes_run()
+    before = obs.cache_stats()["um_lanes_run"]
     r_seq = simulate(t, cfgs[0])
-    assert um.um_lanes_run() == before
+    assert obs.cache_stats()["um_lanes_run"] == before
     assert r_seq.counters["um_faults"] == rs[0].counters["um_faults"]
 
 
@@ -241,7 +242,7 @@ def test_hot_threshold_is_runtime_data():
     base = HMSConfig(footprint=t.footprint, organization="hbm", r_hbm=0.4)
     specs = [um.um_spec(dataclasses.replace(base, um_hot_threshold=h),
                         nvlink=True) for h in (2, 4, 16)]
-    um.clear_um_results()
+    obs.reset(hms=False, keep_compiled=True)
     rs = um.simulate_um_many(t, specs)
     migs = [r.migrated for r in rs]
     rems = [r.remote_cols for r in rs]
