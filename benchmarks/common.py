@@ -70,17 +70,22 @@ def host_metadata() -> Dict[str, object]:
     """Host descriptor embedded in benchmark JSON artifacts so wall-clock
     numbers (and the shard cost model behind them) are comparable across
     machines: the obs identity block (platform, Python/JAX versions, git
-    SHA + dirty flag) plus the measured ``_STEP_COST_*`` constants and
-    shard cap the engine selected shards with."""
-    from repro.core import simulator as sim_mod
+    SHA + dirty flag) plus the cost-model constants and caps the engine
+    selected its (shards x segments) execution shape with."""
+    from repro.core import costmodel
 
     return {
         **obs.host_metadata(),
-        "step_cost_solo": sim_mod._STEP_COST_SOLO,
-        "step_cost_overhead": sim_mod._STEP_OVERHEAD,
-        "step_cost_lane": sim_mod._LANE_COST,
-        "max_shards": sim_mod._MAX_SHARDS,
+        "step_cost_solo": costmodel.STEP_COST_SOLO,
+        "step_cost_overhead": costmodel.STEP_OVERHEAD,
+        "step_cost_lane": costmodel.LANE_COST,
+        "um_step_cost_solo": costmodel.UM_STEP_COST_SOLO,
+        "um_step_cost_overhead": costmodel.UM_STEP_OVERHEAD,
+        "um_step_cost_lane": costmodel.UM_LANE_COST,
+        "max_shards": costmodel.max_shards(),
+        "max_tsplit": costmodel.max_tsplit(),
         "env_repro_shards": os.environ.get("REPRO_SHARDS"),
+        "env_repro_tsplit": os.environ.get("REPRO_TSPLIT"),
         "env_repro_bench_n": os.environ.get("REPRO_BENCH_N"),
     }
 

@@ -26,7 +26,10 @@ from typing import Iterator, List, Optional, Tuple
 # INFO_SUBTREES, on any component)
 INFO_SUBTREES = ("host", "figures")      # identity / output paths
 TIMING_SUFFIXES = ("_s", "us_per_point", "us_per_call")
-INFO_MARKERS = ("shard", "speedup", "ts")
+# execution-shape keys (shard counts, temporal segments, stitch rounds,
+# replay prefixes) and measured speedups legitimately vary across hosts —
+# the parity suites pin the *counters* regardless of shape
+INFO_MARKERS = ("shard", "speedup", "ts", "stitch", "segment", "replay")
 INFO_SUFFIXES = ("depth",)
 
 

@@ -263,13 +263,18 @@ def sweep_design_space(results: Dict) -> List[tuple]:
     writes ``benchmarks/artifacts/BENCH_sweep.json`` with, per workload:
     steady-state vs compile wall time for the full grid, plus the
     single-config shard speedup (auto shard count vs the S=1 sequential
-    scan) — the perf trajectory CI tracks from PR 3 onward.
+    scan) — the perf trajectory CI tracks from PR 3 onward.  A ``tsplit``
+    section adds the temporal-split scaling curve in the shard-starved
+    regime (S capped at 1, forced T in {1,2,4,8} on the zipf trace): per-T
+    warm wall, stitch rounds, and one shared counter digest — the stitch
+    is bit-exact, so the digest must not move across T.
     """
     import os
     import time
 
     from repro import obs
-    from repro.core import HMSConfig, simulate, simulate_many
+    from repro.core import HMSConfig, costmodel, simulate, simulate_many
+    from repro.core import tsplit as tsplit_mod
     from repro.core.simulator import (_engine_key, group_engine_key,
                                       set_max_shards)
 
@@ -344,13 +349,110 @@ def sweep_design_space(results: Dict) -> List[tuple]:
                      f"@{bkw['ctc_fraction']}/{bkw['scm_mode']}"
                      f"|wall={wall_s:.1f}s"
                      f"|shard_speedup={detail[w]['single_shard_speedup']:.1f}x"))
+    # --- temporal-split scaling: the regime spatial shards can't reach ----
+    # zipf-skewed trace with S capped at 1 (the LPT wall: the hottest CTC
+    # set bounds the padded depth, so extra shards stop helping) — the only
+    # remaining depth lever is T.  Counters must not move: one digest.
+    w = "bfs_tu"
+    t = trace(w)
+    base_cfg = HMSConfig(footprint=t.footprint).validate()
+    t_grid = [1, 2, 4, 8]
+    t_replay = 64
+    was_enabled = obs.enabled()
+    if not was_enabled:
+        obs.enable()                       # in-memory: stitch_rounds per T
+    old_cap = set_max_shards(1)
+    curve = {}
+    try:
+        for tv in t_grid:
+            old_t = costmodel.set_forced_tsplit(tv)
+            old_r = tsplit_mod.set_replay_prefix(t_replay if tv > 1 else 0)
+            try:
+                _, _ = timed(lambda: simulate(t, base_cfg))
+                r, wall = timed(lambda: simulate(t, base_cfg), reps=2)
+                rec = [x for x in obs.records() if x.engine == "hms"][-1]
+                curve[str(tv)] = {
+                    "wall_s": wall,
+                    "stitch_rounds": rec.stitch_rounds,
+                    "counter_digest": obs.counter_digest(r.counters),
+                }
+            finally:
+                costmodel.set_forced_tsplit(old_t)
+                tsplit_mod.set_replay_prefix(old_r)
+    finally:
+        set_max_shards(old_cap)
+        if not was_enabled:
+            obs.disable()
+    digests = {c["counter_digest"] for c in curve.values()}
+    assert len(digests) == 1, f"temporal split moved counters: {digests}"
+    best_t = min(t_grid, key=lambda tv: curve[str(tv)]["wall_s"])
+    tsec = {
+        "workload": w,
+        "n": bench_n(),
+        "replay_prefix": t_replay,
+        "t_grid": t_grid,
+        "curve": curve,
+        "best_t_segments": best_t,
+        "tsplit_speedup": (curve["1"]["wall_s"]
+                           / max(curve[str(best_t)]["wall_s"], 1e-9)),
+        "counter_digest": curve["1"]["counter_digest"],
+    }
+    rows.append((f"sweep.tsplit.{w}", curve[str(best_t)]["wall_s"] * 1e6,
+                 f"bestT={best_t}"
+                 f"|speedup={tsec['tsplit_speedup']:.2f}x"
+                 f"|rounds={curve[str(best_t)]['stitch_rounds']}"))
     results["sweep"] = detail
+    results["sweep_tsplit"] = tsec
 
     from .common import host_metadata
 
     art = os.path.join(os.path.dirname(__file__), "artifacts")
     os.makedirs(art, exist_ok=True)
+    figs = _tsplit_figure(tsec, art)
     with open(os.path.join(art, "BENCH_sweep.json"), "w") as f:
         json.dump({"n": bench_n(), "grid_points": len(grid),
-                   "host": host_metadata(), "workloads": detail}, f, indent=1)
+                   "host": host_metadata(), "workloads": detail,
+                   "tsplit": tsec, "figures": figs}, f, indent=1)
     return rows
+
+
+def _tsplit_figure(tsec: Dict, art: str) -> List[str]:
+    """Render the temporal-split scaling curve (wall vs T, stitch rounds on
+    the twin axis).  Import-gated: the JSON artifact is the contract."""
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except Exception:
+        return []
+    import os
+
+    figs_dir = os.path.join(art, "figs")
+    os.makedirs(figs_dir, exist_ok=True)
+    ts = tsec["t_grid"]
+    wall = [tsec["curve"][str(t)]["wall_s"] * 1e3 for t in ts]
+    rounds = [tsec["curve"][str(t)]["stitch_rounds"] for t in ts]
+    fig, ax = plt.subplots(figsize=(5.2, 3.6), dpi=150)
+    ax.grid(True, axis="y", color="#e5e4df", linewidth=0.8, zorder=0)
+    for side in ("top", "right"):
+        ax.spines[side].set_visible(False)
+    ax.plot(ts, wall, color="#2a78d6", linewidth=2, marker="o",
+            markersize=4, zorder=3, label="warm wall (ms)")
+    ax.set_xscale("log", base=2)
+    ax.set_xticks(ts)
+    ax.set_xticklabels([str(t) for t in ts])
+    ax.set_xlabel("temporal segments T (S capped at 1)", color="#3d3d38")
+    ax.set_ylabel("warm wall per call (ms)", color="#3d3d38")
+    ax2 = ax.twinx()
+    ax2.spines["top"].set_visible(False)
+    ax2.plot(ts, rounds, color="#eb6834", linewidth=1.5, marker="s",
+             markersize=3, linestyle="--", zorder=3, label="stitch rounds")
+    ax2.set_ylabel("stitch rounds", color="#eb6834")
+    ax.set_title(f"Temporal-split scaling — {tsec['workload']} "
+                 f"(n={tsec['n']})", fontsize=10, loc="left",
+                 color="#1a1a19")
+    path = os.path.join(figs_dir, "sweep_tsplit.png")
+    fig.tight_layout()
+    fig.savefig(path)
+    plt.close(fig)
+    return [path]

@@ -16,6 +16,10 @@ Fig. 15/17-style oversubscription grid — three ways:
 Writes ``benchmarks/artifacts/BENCH_um.json`` with the wall/compile split,
 the measured speedup vs the reference loop, per-point counters (parity
 asserted against the reference while we have both), and host metadata.
+A ``tsplit`` section adds the temporal-split scaling curve: the paging
+scan cannot shard, so forced T in {1, 2, 4} over the zipf trace is its
+whole depth-parallelism story — per-T warm wall, stitch rounds, and one
+shared counter digest (the stitch is bit-exact; the digest must not move).
 
     PYTHONPATH=src python -m benchmarks.run um
 """
@@ -111,11 +115,123 @@ def run(results: Dict) -> List[tuple]:
                      f"|faults@4x={worst['faults']:.0f}"))
     results["um"] = detail
 
+    tsec = _tsplit_curve(rows)
+    results["um_tsplit"] = tsec
+
     art = os.path.join(os.path.dirname(__file__), "artifacts")
     os.makedirs(art, exist_ok=True)
+    figs = _tsplit_figure(tsec, art)
     with open(os.path.join(art, "BENCH_um.json"), "w") as f:
         json.dump({"n": n, "rel_grid": list(REL_GRID),
                    "modes": ["fault", "nvlink"],
-                   "host": host_metadata(), "workloads": detail},
+                   "host": host_metadata(), "workloads": detail,
+                   "tsplit": tsec, "figures": figs},
                   f, indent=1)
     return rows
+
+
+def _tsplit_curve(rows: List[tuple]) -> Dict:
+    """Forced-T scaling of the paging scan on the zipf trace (both link
+    modes in one two-lane batch per T).  Fresh result caches per point so
+    every T actually runs the engine; counters are digest-checked equal."""
+    from repro import obs, um
+    from repro.core import HMSConfig, costmodel, tsplit
+
+    w = "bfs_tu"
+    t = trace(w)
+    cfgs = [HMSConfig(footprint=t.footprint, organization="hbm", r_hbm=0.5)]
+    specs = [um.um_spec(cfgs[0], nvlink=nv) for nv in MODES]
+    t_grid = [1, 2, 4]
+    was_enabled = obs.enabled()
+    if not was_enabled:
+        obs.enable()                      # in-memory: stitch_rounds per T
+    curve = {}
+    try:
+        for tv in t_grid:
+            old_t = costmodel.set_forced_tsplit(tv)
+            old_r = tsplit.set_replay_prefix(64 if tv > 1 else 0)
+            try:
+                obs.reset(hms=False)              # cold: compile this T
+                um.simulate_um_many(t, specs)
+                obs.reset(hms=False, keep_compiled=True)
+                t0 = time.time()
+                rs = um.simulate_um_many(t, specs)
+                wall = time.time() - t0
+                rec = [x for x in obs.records() if x.engine == "um"][-1]
+                curve[str(tv)] = {
+                    "wall_s": wall,
+                    "stitch_rounds": rec.stitch_rounds,
+                    "counter_digest": obs.counter_digest([{
+                        "um_faults": r.phase_faults,
+                        "um_migrated": r.phase_migrated,
+                        "um_writebacks": r.phase_writebacks,
+                        "um_remote_cols": r.phase_remote_cols,
+                    } for r in rs]),
+                }
+            finally:
+                costmodel.set_forced_tsplit(old_t)
+                tsplit.set_replay_prefix(old_r)
+    finally:
+        if not was_enabled:
+            obs.disable()
+    digests = {c["counter_digest"] for c in curve.values()}
+    assert len(digests) == 1, f"UM temporal split moved counters: {digests}"
+    best_t = min(t_grid, key=lambda tv: curve[str(tv)]["wall_s"])
+    tsec = {
+        "workload": w,
+        "n": bench_n(),
+        "replay_prefix": 64,
+        "t_grid": t_grid,
+        "curve": curve,
+        "best_t_segments": best_t,
+        "tsplit_speedup": (curve["1"]["wall_s"]
+                           / max(curve[str(best_t)]["wall_s"], 1e-9)),
+        "counter_digest": curve["1"]["counter_digest"],
+    }
+    rows.append((f"um.tsplit.{w}", curve[str(best_t)]["wall_s"] * 1e6,
+                 f"bestT={best_t}"
+                 f"|speedup={tsec['tsplit_speedup']:.2f}x"
+                 f"|rounds={curve[str(best_t)]['stitch_rounds']}"))
+    return tsec
+
+
+def _tsplit_figure(tsec: Dict, art: str) -> List[str]:
+    """UM temporal-split scaling figure (wall vs T + stitch rounds).
+    Import-gated, same contract as the sweep suite's figure."""
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except Exception:
+        return []
+
+    figs_dir = os.path.join(art, "figs")
+    os.makedirs(figs_dir, exist_ok=True)
+    ts = tsec["t_grid"]
+    wall = [tsec["curve"][str(t)]["wall_s"] * 1e3 for t in ts]
+    rounds = [tsec["curve"][str(t)]["stitch_rounds"] for t in ts]
+    fig, ax = plt.subplots(figsize=(5.2, 3.6), dpi=150)
+    ax.grid(True, axis="y", color="#e5e4df", linewidth=0.8, zorder=0)
+    for side in ("top", "right"):
+        ax.spines[side].set_visible(False)
+    ax.plot(ts, wall, color="#1baf7a", linewidth=2, marker="o",
+            markersize=4, zorder=3)
+    ax.set_xscale("log", base=2)
+    ax.set_xticks(ts)
+    ax.set_xticklabels([str(t) for t in ts])
+    ax.set_xlabel("temporal segments T (UM scan: no spatial shards)",
+                  color="#3d3d38")
+    ax.set_ylabel("warm wall per 2-lane sweep (ms)", color="#3d3d38")
+    ax2 = ax.twinx()
+    ax2.spines["top"].set_visible(False)
+    ax2.plot(ts, rounds, color="#eb6834", linewidth=1.5, marker="s",
+             markersize=3, linestyle="--", zorder=3)
+    ax2.set_ylabel("stitch rounds", color="#eb6834")
+    ax.set_title(f"UM temporal-split scaling — {tsec['workload']} "
+                 f"(n={tsec['n']})", fontsize=10, loc="left",
+                 color="#1a1a19")
+    path = os.path.join(figs_dir, "um_tsplit.png")
+    fig.tight_layout()
+    fig.savefig(path)
+    plt.close(fig)
+    return [path]

@@ -1,0 +1,196 @@
+"""Unified scan cost model: spatial shards x temporal segments, both engines.
+
+One module owns every hand-set execution-shape constant and cap the
+engines used to scatter across ``simulator.py`` and ``um/engine.py``:
+
+  * the measured per-step cost constants (``STEP_COST_SOLO`` /
+    ``STEP_OVERHEAD`` / ``LANE_COST`` for the HMS scan, the ``UM_*``
+    triple for the paging scan),
+  * the shard cap (``REPRO_SHARDS``) and the temporal-segment cap
+    (``REPRO_TSPLIT``),
+  * and the (S, T) chooser both engines call per engine key.
+
+Env knobs (also settable programmatically; see README "Environment
+knobs"):
+
+  ============== ======= ==================================================
+  variable       default meaning
+  ============== ======= ==================================================
+  REPRO_SHARDS   64      cap on spatial shards S (1 = sequential scan)
+  REPRO_TSPLIT   16      cap on temporal segments T (1 = no splitting)
+  ============== ======= ==================================================
+
+Cost shape
+----------
+One scan step costs a fixed dispatch overhead plus per-lane work, with a
+separate (much larger) solo constant — a lone-lane scan falls off the
+vectorized path.  Spatial sharding divides steps but multiplies lanes;
+temporal splitting does the same AND pays the speculative re-run rounds
+of the fixed-point stitch (``repro.core.tsplit``), so the modeled cost of
+an (S, T) split of a depth-D scan shared by ``batch`` configs is::
+
+    rounds_est(T) * (ceil(D_S / T) + replay) * step_cost(S * T * batch)
+
+where ``D_S`` is the real (LPT-binned) shard depth and ``rounds_est`` is
+the expected stitch-round count (1 for T=1; ~2 for small T — round one
+speculates, round two confirms the fixed point — creeping up slowly for
+deeper splits).  On a narrow CPU host the model mostly picks T=1 once
+S*batch fills the vector units; temporal splitting wins exactly where
+spatial lanes are scarce — zipf traces whose hottest CTC set caps the LPT
+depth at low S, and the UM paging scan, which cannot shard at all.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from typing import Callable, Optional, Tuple
+
+# --- measured per-step scan costs, microseconds (CPU host; the *shape* is
+# what matters, exact constants only move the break-even points) ----------
+STEP_COST_SOLO = 19.0      # a 1-lane HMS scan falls off the vector path
+STEP_OVERHEAD = 3.0
+LANE_COST = 1.0
+
+# The UM paging step does more per lane (a stable argsort over the 4x-chunk
+# eviction window plus several gated scatters), so its constants sit higher.
+UM_STEP_COST_SOLO = 30.0
+UM_STEP_OVERHEAD = 6.0
+UM_LANE_COST = 3.0
+
+
+def step_cost(lanes: int) -> float:
+    """Modeled per-step cost of the HMS scan at ``lanes`` parallel lanes
+    (shards x segments x batched configs)."""
+    if lanes == 1:
+        return STEP_COST_SOLO
+    return STEP_OVERHEAD + LANE_COST * lanes
+
+
+def um_step_cost(lanes: int) -> float:
+    """Same shape for the UM paging scan (lanes = specs x segments)."""
+    if lanes == 1:
+        return UM_STEP_COST_SOLO
+    return UM_STEP_OVERHEAD + UM_LANE_COST * lanes
+
+
+def rounds_estimate(t_segments: int) -> float:
+    """Expected fixed-point stitch rounds for a T-way temporal split: one
+    round runs everything speculatively, one confirms; deeper splits take a
+    little longer to settle (composition propagates at least one exact
+    boundary per round, but usually many)."""
+    if t_segments <= 1:
+        return 1.0
+    return 2.0 + 0.25 * (math.log2(t_segments) - 1.0)
+
+
+# --- caps + overrides ------------------------------------------------------
+
+_MAX_SHARDS = int(os.environ.get("REPRO_SHARDS", "64"))
+_MAX_TSPLIT = int(os.environ.get("REPRO_TSPLIT", "16"))
+_FORCED_SHARDS: Optional[int] = None
+_FORCED_TSPLIT: Optional[int] = None
+
+
+def max_shards() -> int:
+    return _MAX_SHARDS
+
+
+def set_max_shards(cap: int) -> int:
+    """Set the shard-count cap (1 = sequential engine); returns the old cap.
+    Benchmarks use this to measure shard speedup against the S=1 scan."""
+    global _MAX_SHARDS
+    old, _MAX_SHARDS = _MAX_SHARDS, max(1, int(cap))
+    return old
+
+
+def set_forced_shards(n: Optional[int]) -> Optional[int]:
+    """Pin the shard count, bypassing the cost model (any count is valid —
+    set bins just go empty past the partition-domain size).  Tests use this
+    so shard-parallel coverage doesn't depend on host-tuned cost constants.
+    ``None`` restores automatic selection; returns the previous value."""
+    global _FORCED_SHARDS
+    old = _FORCED_SHARDS
+    _FORCED_SHARDS = None if n is None else max(1, int(n))
+    return old
+
+
+def max_tsplit() -> int:
+    return _MAX_TSPLIT
+
+
+def set_max_tsplit(cap: int) -> int:
+    """Set the temporal-segment cap (1 = no temporal splitting); returns
+    the old cap."""
+    global _MAX_TSPLIT
+    old, _MAX_TSPLIT = _MAX_TSPLIT, max(1, int(cap))
+    return old
+
+
+def set_forced_tsplit(t: Optional[int]) -> Optional[int]:
+    """Pin the temporal-segment count for BOTH engines, bypassing the cost
+    model (any T >= 1 is valid: the stitch is exact at every split).
+    ``None`` restores automatic selection; returns the previous value."""
+    global _FORCED_TSPLIT
+    old = _FORCED_TSPLIT
+    _FORCED_TSPLIT = None if t is None else max(1, int(t))
+    return old
+
+
+def forced_tsplit() -> Optional[int]:
+    return _FORCED_TSPLIT
+
+
+# --- choosers --------------------------------------------------------------
+
+def _t_candidates(depth: int) -> list:
+    out = [1]
+    t = 2
+    while t <= _MAX_TSPLIT and t <= depth:
+        out.append(t)
+        t *= 2
+    return out
+
+
+def choose_hms_split(depth_of: Callable[[int], int], batch: int,
+                     replay: int = 0) -> Tuple[int, int]:
+    """Pick (shards, t_segments) minimizing modeled HMS scan cost for one
+    compiled engine shared by ``batch`` configs.
+
+    ``depth_of(S)`` must return the real (LPT-binned) padded shard depth
+    for shard count S — zipf traces bin unevenly, so depth is measured,
+    not ``n/S``.  Candidates are powers of two under the caps; a bigger
+    lane count must beat the incumbent clearly (ties break toward fewer
+    lanes, then fewer segments — the sequential-most shape)."""
+    forced_s, forced_t = _FORCED_SHARDS, _FORCED_TSPLIT
+    if forced_s is not None and forced_t is not None:
+        return forced_s, forced_t
+
+    best = None  # (cost, lanes, t, s)
+    s = forced_s if forced_s is not None else 1
+    s_cap = forced_s if forced_s is not None else _MAX_SHARDS
+    while s <= s_cap:
+        depth = depth_of(s)
+        ts = [forced_t] if forced_t is not None else _t_candidates(depth)
+        for t in ts:
+            seg = -(-depth // t) + (replay if t > 1 else 0)
+            cost = rounds_estimate(t) * seg * step_cost(s * t * batch)
+            cand = (cost, s * t, t, s)
+            if best is None or cost < 0.95 * best[0]:
+                best = cand
+        s *= 2
+    return best[3], best[2]
+
+
+def choose_um_split(n: int, width: int) -> int:
+    """Temporal segment count for a UM paging batch of ``width`` spec
+    lanes over an n-request trace (the UM scan cannot shard, so T is its
+    only depth lever)."""
+    if _FORCED_TSPLIT is not None:
+        return _FORCED_TSPLIT
+    best_t, best_cost = 1, None
+    for t in _t_candidates(n):
+        cost = rounds_estimate(t) * (-(-n // t)) * um_step_cost(width * t)
+        if best_cost is None or cost < 0.95 * best_cost:
+            best_t, best_cost = t, cost
+    return best_t

@@ -55,6 +55,18 @@ split so a sweep costs one compile and one short device loop:
     order.  ``S`` is chosen per engine key (capped by ``REPRO_SHARDS`` /
     :func:`set_max_shards`, shard depth, and the CTC set counts of every
     config sharing the compile); S=1 reproduces the PR 2 sequential engine.
+  * **Temporal splitting** — when spatial lanes run out (zipf traces whose
+    hottest CTC set bounds the LPT depth at low S), each shard's stream is
+    further cut into T *temporal segments* run as extra vmap lanes, each
+    seeded from a guessed boundary carry and made exact by the fixed-point
+    stitch in ``repro.core.tsplit``: re-run segments with guesses replaced
+    by the carries their predecessors actually produced (composed through
+    per-segment touched-slot masks) until the boundaries stop changing,
+    which happens in 1-2 extra rounds because cache state forgets its seed
+    quickly.  At the fixed point every emitted flag equals the sequential
+    scan's, so counters stay bit-for-bit across every (S, T).  The
+    (S, T) shape is chosen by ``repro.core.costmodel`` per engine key;
+    a bounded-round guard falls back to the exact T=1 engine.
   * ``simulate_many`` vmaps the compiled engine over a batch of runtime
     parameter sets sharing one static structure, so Fig. 18-style CTC
     sweeps and policy ablations cost one compile + one device loop over
@@ -92,7 +104,9 @@ import numpy as np
 from repro import obs
 
 from . import bypass as bp
+from . import costmodel
 from . import ctc as ctc_mod
+from . import tsplit
 from .timing import (
     COLUMN_BYTES,
     COLUMNS_PER_ROW,
@@ -100,7 +114,7 @@ from .timing import (
     UM_PAGE_BYTES,
     HMSConfig,
 )
-from .traces import Trace, geometry_key, preprocess, shard_plan
+from .traces import Trace, geometry_key, preprocess, shard_depth, shard_plan
 
 # Module (not symbol) import: repro.um imports repro.core.timing/traces,
 # which are fully initialized before repro.core.__init__ reaches this
@@ -220,74 +234,31 @@ class _EngineKey:
     ctc_ways_alloc: int
     ctc_sectors: int
     phases: int = 1         # counter segments (scenario phase count)
+    t_segments: int = 1     # temporal segments T (1 = no splitting)
+    replay: int = 0         # replay-prefix steps per segment (T > 1 only)
 
 
 _USES_CTC = POLICIES_WITH_CTC
 
-# Shard-count cap (REPRO_SHARDS=1 forces the sequential engine).
-_MAX_SHARDS = int(os.environ.get("REPRO_SHARDS", "64"))
-
-# Scan-step cost model for shard selection, in microseconds (measured on a
-# CPU host; the *shape* is what matters, exact constants only move the
-# break-even point).  One step costs a fixed dispatch overhead plus
-# per-(shard x config) lane work — sharding divides steps but multiplies
-# lanes, so the optimum depends on the measured shard depths (zipf traces
-# bin unevenly) and the batch width, not "as many shards as possible".
-# A lone-lane scan (batch 1, S=1) empirically falls off the vectorized
-# path and costs several times the extrapolated lane cost, hence the
-# separate solo constant.
-_STEP_COST_SOLO = 19.0
-_STEP_OVERHEAD = 3.0
-_LANE_COST = 1.0
-
-
-def _step_cost(lanes: int) -> float:
-    if lanes == 1:
-        return _STEP_COST_SOLO
-    return _STEP_OVERHEAD + _LANE_COST * lanes
+# The scan-step cost constants and shard/segment caps live in
+# ``repro.core.costmodel`` (one model for both engines); these delegations
+# keep the long-standing public override points on this module.
 
 
 def set_max_shards(cap: int) -> int:
     """Set the shard-count cap (1 = sequential engine); returns the old cap.
-    Benchmarks use this to measure shard speedup against the S=1 scan."""
-    global _MAX_SHARDS
-    old, _MAX_SHARDS = _MAX_SHARDS, max(1, int(cap))
-    return old
-
-
-_FORCED_SHARDS: int | None = None
+    Benchmarks use this to measure shard speedup against the S=1 scan.
+    Delegates to :func:`repro.core.costmodel.set_max_shards`."""
+    return costmodel.set_max_shards(cap)
 
 
 def set_forced_shards(n: int | None) -> int | None:
     """Pin the shard count, bypassing the cost model (any count is valid —
     set bins just go empty past the partition-domain size).  Tests use this
     so shard-parallel coverage doesn't depend on host-tuned cost constants.
-    ``None`` restores automatic selection; returns the previous value."""
-    global _FORCED_SHARDS
-    old = _FORCED_SHARDS
-    _FORCED_SHARDS = None if n is None else max(1, int(n))
-    return old
-
-
-def _select_shards(trace: Trace, cfgs: Sequence[HMSConfig],
-                   batch: int) -> int:
-    """Shard count minimizing modeled scan cost for one compiled engine
-    shared by ``batch`` configs: ``depth_S * step_cost(S * batch)`` over
-    power-of-two candidates, with real (LPT-binned) shard depths."""
-    from .traces import shard_depth
-
-    if _FORCED_SHARDS is not None:
-        return _FORCED_SHARDS
-    best_s, best_cost = 1, None
-    s = 1
-    while s <= _MAX_SHARDS:
-        depth = max(shard_depth(trace, c, s) for c in cfgs)
-        cost = depth * _step_cost(s * batch)
-        # a bigger S must beat the incumbent clearly (ties -> fewer shards)
-        if best_cost is None or cost < 0.95 * best_cost:
-            best_s, best_cost = s, cost
-        s *= 2
-    return best_s
+    ``None`` restores automatic selection; returns the previous value.
+    Delegates to :func:`repro.core.costmodel.set_forced_shards`."""
+    return costmodel.set_forced_shards(n)
 
 
 def _engine_key(trace: Trace, cfg: HMSConfig) -> _EngineKey:
@@ -356,11 +327,12 @@ def _dice(n: int) -> np.ndarray:
 
 
 def _engine_inputs(trace: Trace, cfg: HMSConfig, pre,
-                   shards: int, depth: int) -> Dict[str, np.ndarray]:
+                   key: _EngineKey) -> Dict[str, np.ndarray]:
     # packed-word layout limits (tag<<10 must stay inside int32; affinity
     # levels live in an 8-bit field; CTC tag+1 in a 23-bit field)
     assert int(pre["tag"].max(initial=0)) < (1 << 21), "tag overflows packing"
     assert cfg.n_levels <= 256, "affinity level overflows 8-bit packing"
+    shards, depth = key.shards, key.depth
     plan = shard_plan(trace, cfg, shards)
     assert int(plan["rg_local"].max(initial=0)) < (1 << 23) - 1, (
         "row group overflows CTC tag packing")
@@ -384,6 +356,16 @@ def _engine_inputs(trace: Trace, cfg: HMSConfig, pre,
         "dice": _dice(trace.n),
         "pos": pos,
     }
+    if key.t_segments > 1:
+        # cut each shard row into T temporal segments: the scan lanes become
+        # S*T, scatter positions keep replay/pad steps on the dropped
+        # sentinel, gather positions re-execute the replay window
+        lanes = shards * key.t_segments
+        sp = tsplit.split_positions(pos, trace.n, key.t_segments, key.replay)
+        out["pos"] = sp["spos"].reshape(lanes, -1)
+        if key.replay > 0:
+            out["gpos"] = sp["gpos"].reshape(lanes, -1)
+            out["replay"] = sp["replay"].reshape(lanes, -1)
     if trace.n_phases > 1:
         out["phase"] = trace.phase_id
     return out
@@ -400,8 +382,14 @@ def _make_engine(key: _EngineKey):
     two_level = policy in ("hms", "no_second_level")
     mc_wt = policy == "mccache"
     dirty_ok = not mc_wt
+    # Temporally split engines (T > 1) take explicit boundary carries and
+    # return the per-lane final carries alongside the counters, so the host
+    # stitch loop can compose and re-run them to the exact fixed point.
+    # Unsplit engines keep the lean (xs, p) -> C shape — no carry transfer
+    # on the common path.
+    split = key.t_segments > 1
 
-    def engine(xs, p):
+    def _impl(xs, p, carry, use_replay):
         ncols = jnp.asarray(xs["run_ncols"])
         haswrite = jnp.asarray(xs["run_haswrite"])
         is_write = jnp.asarray(xs["is_write"])
@@ -471,9 +459,18 @@ def _make_engine(key: _EngineKey):
         n_sets = p["ctc_sets"]
         e_ways = p["ctc_ways"]
 
-        pos = jnp.asarray(xs["pos"])                  # (S, depth), pad == n
+        pos = jnp.asarray(xs["pos"])            # (lanes, L), pad == n
         pvalid = pos < key.n
-        posc = jnp.minimum(pos, key.n - 1)
+        if split and key.replay > 0:
+            # replay-prefix steps gather real history (gpos) but scatter to
+            # the dropped sentinel; their state-updates are live only in the
+            # warm-up round (use_replay is a traced bool, so disabling them
+            # never re-traces) — re-run rounds see pure core segments
+            posc = jnp.asarray(xs["gpos"])
+            live = pvalid | (jnp.asarray(xs["replay"]) & use_replay)
+        else:
+            posc = jnp.minimum(pos, key.n - 1)
+            live = pvalid
 
         def gather(a):
             return jnp.take(jnp.asarray(a), posc, axis=0)
@@ -492,7 +489,7 @@ def _make_engine(key: _EngineKey):
                    | (jnp.asarray(xs["tag"], jnp.int64) << 40))
         scan_xs = {
             "slot": gather(xs["slot"]),
-            "meta": gather(meta_tr) | (pvalid.astype(jnp.int64) << 16),
+            "meta": gather(meta_tr) | (live.astype(jnp.int64) << 16),
         }
 
         def step(carry, x):
@@ -560,14 +557,22 @@ def _make_engine(key: _EngineKey):
                  | (jnp.asarray(need_aff_read, jnp.int32) << 6))
             return (cache, ctcst), y
 
-        def shard_scan(sh_xs):
-            cache = jnp.zeros((key.lines_alloc,), jnp.int32)
-            ctcst = ctc_mod.packed_init(
-                key.ctc_sets_alloc, key.ctc_ways_alloc, key.ctc_sectors)
-            _, y = jax.lax.scan(step, (cache, ctcst), sh_xs)
-            return y
+        if split:
+            def shard_scan(sh_xs, cache0, ctc0):
+                (cf, tf), y = jax.lax.scan(step, (cache0, ctc0), sh_xs)
+                return (cf, tf), y
 
-        y_sh = jax.vmap(shard_scan)(scan_xs)          # (S, depth) int32
+            (cache_f, ctc_f), y_sh = jax.vmap(shard_scan)(
+                scan_xs, jnp.asarray(carry[0]), jnp.asarray(carry[1]))
+        else:
+            def shard_scan(sh_xs):
+                cache = jnp.zeros((key.lines_alloc,), jnp.int32)
+                ctcst = ctc_mod.packed_init(
+                    key.ctc_sets_alloc, key.ctc_ways_alloc, key.ctc_sectors)
+                _, y = jax.lax.scan(step, (cache, ctcst), sh_xs)
+                return y
+
+            y_sh = jax.vmap(shard_scan)(scan_xs)      # (lanes, L) int32
 
         # scatter the packed decision words back to trace order; padding
         # sentinels land in the dropped overflow slot n
@@ -685,7 +690,16 @@ def _make_engine(key: _EngineKey):
         add("scm_acts", wb)
         add("scm_wr_acts", wb)
 
+        if split:
+            return (cache_f, ctc_f), C
         return C
+
+    if split:
+        def engine(xs, p, carry, use_replay):
+            return _impl(xs, p, carry, use_replay)
+    else:
+        def engine(xs, p):
+            return _impl(xs, p, None, None)
 
     return engine
 
@@ -715,15 +729,21 @@ def group_engine_key(trace: Trace, configs: Sequence[HMSConfig]) -> _EngineKey:
     assert len(policies) == 1 and len(sectors) == 1, (
         "group_engine_key wants configs from one static-structure group")
     policy = policies.pop()
+    replay = tsplit.replay_prefix()
     with obs.span("shard_plan", policy=policy, configs=len(cfgs)):
-        shards = _select_shards(trace, cfgs, len(cfgs))
+        shards, t_seg = costmodel.choose_hms_split(
+            lambda s: max(shard_depth(trace, c, s) for c in cfgs),
+            len(cfgs), replay)
         plans = [shard_plan(trace, c, shards) for c in cfgs]
+    depth = max(p["depth"] for p in plans)
+    # a forced T may exceed the shard depth; segments need >= 1 core step
+    t_seg = max(1, min(t_seg, depth))
     use_ctc = policy in _USES_CTC
     return _EngineKey(
         policy=policy,
         n=trace.n,
         shards=shards,
-        depth=max(p["depth"] for p in plans),
+        depth=depth,
         lines_alloc=_bucket(max(p["lines_bound"] for p in plans)),
         # non-CTC policies carry no CTC state; allocate the minimum
         ctc_sets_alloc=_bucket(max(p["n_sets_local"] for p in plans))
@@ -732,6 +752,8 @@ def group_engine_key(trace: Trace, configs: Sequence[HMSConfig]) -> _EngineKey:
         if use_ctc else 1,
         ctc_sectors=sectors.pop(),
         phases=trace.n_phases,
+        t_segments=t_seg,
+        replay=replay if t_seg > 1 else 0,
     )
 
 
@@ -740,12 +762,14 @@ def _fingerprint(key: _EngineKey, width: int) -> str:
     key plus the vmap batch width (the batched jit re-specializes per
     width, so width is part of what 'one compile' means)."""
     return (f"hms:{key.policy}:n{key.n}:s{key.shards}x{key.depth}"
+            f":T{key.t_segments}r{key.replay}"
             f":L{key.lines_alloc}:C{key.ctc_sets_alloc}x{key.ctc_ways_alloc}"
             f"x{key.ctc_sectors}:p{key.phases}:w{width}")
 
 
 def _obs_hms_record(entry: str, trace: Trace, key: _EngineKey, width: int,
-                    compiled: bool, wall_s: float, digest: str) -> None:
+                    compiled: bool, wall_s: float, digest: str,
+                    rounds: int = 1) -> None:
     """Build + emit one HMS ledger record (caller gates on obs.enabled())."""
     obs.record(obs.RunRecord(
         entry=entry, engine="hms", trace=trace.name, n=trace.n,
@@ -753,6 +777,8 @@ def _obs_hms_record(entry: str, trace: Trace, key: _EngineKey, width: int,
         compiled=compiled, wall_s=wall_s, batch=width,
         counter_digest=digest, shards=key.shards, depth=key.depth,
         load_imbalance=key.shards * key.depth / max(1, key.n),
+        t_segments=key.t_segments, stitch_rounds=rounds,
+        replay_prefix=key.replay,
         host=obs.host_metadata(), **obs.git_info()))
 
 
@@ -777,12 +803,12 @@ def clear_engine_cache() -> None:
 def _counting(key: _EngineKey):
     base = _make_engine(key)
 
-    def fn(xs, p):
+    def fn(*args):
         # body runs only when jit (re-)traces, so the span measures trace
         # (staging) time and the count increments once per compile
         _TRACE_COUNTS[key] = _TRACE_COUNTS.get(key, 0) + 1
         with obs.span("compile", engine="hms", policy=key.policy):
-            return base(xs, p)
+            return base(*args)
 
     return fn
 
@@ -801,7 +827,12 @@ def _batched_engine_for(key: _EngineKey):
     # jit re-specializes per batch shape on its own, so the key needs no
     # width component.
     if key not in _BATCHED_CACHE:
-        _BATCHED_CACHE[key] = jax.jit(jax.vmap(_counting(key)))
+        if key.t_segments > 1:
+            # per-config xs/params/carries; the replay flag is shared
+            vmapped = jax.vmap(_counting(key), in_axes=(0, 0, 0, None))
+        else:
+            vmapped = jax.vmap(_counting(key))
+        _BATCHED_CACHE[key] = jax.jit(vmapped)
     return _BATCHED_CACHE[key]
 
 
@@ -811,27 +842,185 @@ def _local_sets(trace: Trace, cfg: HMSConfig, key: _EngineKey) -> int:
     return shard_plan(trace, cfg, key.shards)["n_sets_local"]
 
 
+def _stitch_masks(trace: Trace, cfg: HMSConfig, key: _EngineKey):
+    """Touched masks of the fixed-point stitch: which cache slots
+    (``(S, T, lines_alloc)`` bool) and CTC set rows (``(S, T, sets_alloc)``
+    bool) each (shard, segment)'s *real core* steps access.
+
+    Every scan step reads and writes exactly its own slot and CTC set row
+    (dead steps write the old value back), so a segment's output restricted
+    to its touched mask is a pure function of its input restricted to that
+    mask — which is what makes masked composition in ``_run_split``
+    equivalent to sequential chaining at the fixed point.  Replay-prefix
+    steps are excluded: their perturbations must never leak into composed
+    boundaries."""
+    plan = shard_plan(trace, cfg, key.shards)
+    pos = plan["pos"]
+    if plan["depth"] < key.depth:
+        pad = np.full((key.shards, key.depth - plan["depth"]),
+                      trace.n, np.int32)
+        pos = np.concatenate([pos, pad], axis=1)
+    sp = tsplit.split_positions(pos, trace.n, key.t_segments, key.replay)
+    S, T = key.shards, key.t_segments
+    core = sp["spos"][:, :, key.replay:]         # (S, T, c) real scatter pos
+    valid = core < trace.n
+    corec = np.minimum(core, max(trace.n - 1, 0))
+    s_idx = np.broadcast_to(np.arange(S)[:, None, None], core.shape)[valid]
+    t_idx = np.broadcast_to(np.arange(T)[None, :, None], core.shape)[valid]
+    slot_mask = np.zeros((S, T, key.lines_alloc), bool)
+    slot_mask[s_idx, t_idx, plan["slot_local"][corec][valid]] = True
+    set_mask = np.zeros((S, T, key.ctc_sets_alloc), bool)
+    if cfg.policy in _USES_CTC:
+        sets = plan["rg_local"][corec] % plan["n_sets_local"]
+        set_mask[s_idx, t_idx, sets[valid]] = True
+    return slot_mask, set_mask
+
+
+def _run_split(key: _EngineKey, fn, xs, params, masks):
+    """Drive a T>1 engine to its exact fixed point (see ``repro.core.tsplit``).
+
+    ``masks`` are the per-config touched masks from :func:`_stitch_masks`,
+    with a leading batch axis when ``fn`` is the batched engine.  Returns
+    ``(counters, total_rounds)`` — counters from the converged round only,
+    so they are bit-for-bit the sequential scan's."""
+    slot_m, set_m = masks
+    S, T = key.shards, key.t_segments
+    lanes = S * T
+    lead = slot_m.shape[:-3]                     # () or (batch,)
+    ctc_row = np.asarray(ctc_mod.packed_init(
+        key.ctc_sets_alloc, key.ctc_ways_alloc, key.ctc_sectors))
+    cache0 = np.zeros(lead + (lanes, key.lines_alloc), np.int32)
+    ctc0 = np.broadcast_to(ctc_row, lead + (lanes,) + ctc_row.shape).copy()
+    seg_c = lead + (S, T, key.lines_alloc)
+    seg_t = lead + (S, T) + ctc_row.shape
+
+    def run(g, use_replay):
+        (cache_f, ctc_f), C = fn(xs, params, g, np.bool_(use_replay))
+        C = {k: np.asarray(v, np.float64) for k, v in C.items()}
+        return (np.asarray(cache_f), np.asarray(ctc_f)), C
+
+    def advance(g, out):
+        # compose boundary guesses from the segment outputs: a slot's value
+        # at boundary t is the last earlier segment's output where touched,
+        # else the cold value — exactly sequential semantics once outputs
+        # are exact on their touched masks
+        cache_o = out[0].reshape(seg_c)
+        ctc_o = out[1].reshape(seg_t)
+        new_c = np.empty_like(cache_o)
+        new_t = np.empty_like(ctc_o)
+        new_c[..., 0, :] = 0
+        new_t[..., 0, :, :] = ctc_row
+        for t in range(1, T):
+            m = slot_m[..., t - 1, :]
+            new_c[..., t, :] = np.where(
+                m, cache_o[..., t - 1, :], new_c[..., t - 1, :])
+            mt = set_m[..., t - 1, :, None]
+            new_t[..., t, :, :] = np.where(
+                mt, ctc_o[..., t - 1, :, :], new_t[..., t - 1, :, :])
+        return new_c.reshape(cache0.shape), new_t.reshape(ctc0.shape)
+
+    def equal(a, b):
+        return np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+
+    g = (cache0, ctc0)
+    extra = 0
+    if key.replay > 0:
+        # warm-up round: replay prefixes live, to produce closer guesses.
+        # Its counters are never accepted — replay perturbs segment state,
+        # so only replay-off rounds carry exact sequential semantics.
+        out, _ = run(g, True)
+        g = advance(g, out)
+        extra = 1
+    C, rounds = tsplit.stitch(
+        lambda gg, _r: run(gg, False), g, advance, equal,
+        max_rounds=key.t_segments + 1)
+    return C, rounds + extra
+
+
 def _run_hms_scan(trace: Trace, cfg: HMSConfig, pre,
                   key: _EngineKey | None = None,
                   entry: str = "simulate") -> Dict[str, np.ndarray]:
     if key is None:
         key = _engine_key(trace, cfg)
+    xs = _engine_inputs(trace, cfg, pre, key)
+    params = _runtime_params(cfg, _local_sets(trace, cfg, key))
     fn = _engine_for(key)
     before = _TRACE_COUNTS.get(key, 0)
     t0 = time.perf_counter()
-    with obs.span("scan", engine="hms", policy=key.policy,
-                  shards=key.shards, batch=1):
-        C = fn(_engine_inputs(trace, cfg, pre, key.shards, key.depth),
-               _runtime_params(cfg, _local_sets(trace, cfg, key)))
-        # scalar (unphased) or (n_phases,) vector (phased) per counter
-        C = {k: np.asarray(v, np.float64) for k, v in C.items()}
+    rounds = 1
+    if key.t_segments > 1:
+        try:
+            with obs.span("scan", engine="hms", policy=key.policy,
+                          shards=key.shards, batch=1):
+                with obs.span("stitch", engine="hms",
+                              segments=key.t_segments, replay=key.replay):
+                    masks = _stitch_masks(trace, cfg, key)
+                    C, rounds = _run_split(key, fn, xs, params, masks)
+        except tsplit.StitchError:
+            # speculation failed to settle — run the exact unsplit engine
+            return _run_hms_scan(
+                trace, cfg, pre,
+                dataclasses.replace(key, t_segments=1, replay=0), entry)
+    else:
+        with obs.span("scan", engine="hms", policy=key.policy,
+                      shards=key.shards, batch=1):
+            C = fn(xs, params)
+            # scalar (unphased) or (n_phases,) vector (phased) per counter
+            C = {k: np.asarray(v, np.float64) for k, v in C.items()}
     wall = time.perf_counter() - t0
     compiled = _TRACE_COUNTS.get(key, 0) > before
     obs.engine_run(_fingerprint(key, 1), compiled)
     if obs.enabled():
         _obs_hms_record(entry, trace, key, 1, compiled, wall,
-                        obs.counter_digest(C))
+                        obs.counter_digest(C), rounds)
     return C
+
+
+def _run_hms_batch(trace: Trace, cfgs: Sequence[HMSConfig], key: _EngineKey,
+                   entry: str = "simulate_many") -> Dict[str, np.ndarray]:
+    """Run one compatible config group through the batched engine (with the
+    temporal-split stitch when the key says so).  Returns the stacked
+    counter dict: ``(batch,)`` or ``(batch, phases)`` float64 per counter."""
+    with obs.span("preprocess", trace=trace.name, batch=len(cfgs)):
+        xs_list = [_engine_inputs(trace, c, preprocess(trace, c), key)
+                   for c in cfgs]
+        xs = {k: np.stack([x[k] for x in xs_list]) for k in xs_list[0]}
+        params_list = [_runtime_params(c, _local_sets(trace, c, key))
+                       for c in cfgs]
+        params = {k: np.stack([p[k] for p in params_list])
+                  for k in params_list[0]}
+    fn = _batched_engine_for(key)
+    before = _TRACE_COUNTS.get(key, 0)
+    t0 = time.perf_counter()
+    rounds = 1
+    if key.t_segments > 1:
+        try:
+            with obs.span("scan", engine="hms", policy=key.policy,
+                          shards=key.shards, batch=len(cfgs)):
+                with obs.span("stitch", engine="hms",
+                              segments=key.t_segments, replay=key.replay):
+                    pairs = [_stitch_masks(trace, c, key) for c in cfgs]
+                    masks = (np.stack([a for a, _ in pairs]),
+                             np.stack([b for _, b in pairs]))
+                    Cs, rounds = _run_split(key, fn, xs, params, masks)
+        except tsplit.StitchError:
+            return _run_hms_batch(
+                trace, cfgs,
+                dataclasses.replace(key, t_segments=1, replay=0), entry)
+    else:
+        with obs.span("scan", engine="hms", policy=key.policy,
+                      shards=key.shards, batch=len(cfgs)):
+            Cs = fn(xs, params)
+            Cs = {k: np.asarray(v, np.float64) for k, v in Cs.items()}
+    wall = time.perf_counter() - t0
+    compiled = _TRACE_COUNTS.get(key, 0) > before
+    obs.engine_run(_fingerprint(key, len(cfgs)), compiled)
+    if obs.enabled():
+        _obs_hms_record(
+            entry, trace, key, len(cfgs), compiled, wall,
+            obs.counter_digest([{k: v[j] for k, v in Cs.items()}
+                                for j in range(len(cfgs))]), rounds)
+    return Cs
 
 
 # ---------------------------------------------------------------------------
@@ -1141,32 +1330,7 @@ def simulate_many(trace: Trace, configs: Sequence[HMSConfig],
                               entry="simulate_many")
             results[i] = _finish_hms(trace, configs[i], C, nvlink)
             continue
-        with obs.span("preprocess", trace=trace.name, batch=len(idxs)):
-            xs_list = [_engine_inputs(trace, configs[i],
-                                      preprocess(trace, configs[i]),
-                                      key.shards, key.depth)
-                       for i in idxs]
-            xs = {k: np.stack([x[k] for x in xs_list]) for k in xs_list[0]}
-            params_list = [_runtime_params(
-                configs[i], _local_sets(trace, configs[i], key))
-                for i in idxs]
-            params = {k: np.stack([p[k] for p in params_list])
-                      for k in params_list[0]}
-        fn = _batched_engine_for(key)
-        before = _TRACE_COUNTS.get(key, 0)
-        t0 = time.perf_counter()
-        with obs.span("scan", engine="hms", policy=key.policy,
-                      shards=key.shards, batch=len(idxs)):
-            Cs = fn(xs, params)
-            Cs = {k: np.asarray(v, np.float64) for k, v in Cs.items()}
-        wall = time.perf_counter() - t0
-        compiled = _TRACE_COUNTS.get(key, 0) > before
-        obs.engine_run(_fingerprint(key, len(idxs)), compiled)
-        if obs.enabled():
-            _obs_hms_record(
-                "simulate_many", trace, key, len(idxs), compiled, wall,
-                obs.counter_digest([{k: v[j] for k, v in Cs.items()}
-                                    for j in range(len(idxs))]))
+        Cs = _run_hms_batch(trace, [configs[i] for i in idxs], key)
         with obs.span("postprocess", trace=trace.name, batch=len(idxs)):
             for j, i in enumerate(idxs):
                 C = {k: np.asarray(v[j], np.float64)

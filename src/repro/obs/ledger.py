@@ -73,6 +73,11 @@ class RunRecord:
     shards: Optional[int] = None
     depth: Optional[int] = None     # padded per-shard scan length
     load_imbalance: Optional[float] = None  # shards*depth/n; 1.0 = perfect LPT
+    # temporal split (None when the engine ran unsplit T=1 semantics
+    # without a stitch; see repro.core.tsplit)
+    t_segments: Optional[int] = None    # temporal segments T
+    stitch_rounds: Optional[int] = None  # fixed-point rounds incl. warm-up
+    replay_prefix: Optional[int] = None  # replay steps per segment boundary
     # UM dedupe accounting (None for hms / single_tier records)
     um_lanes_requested: Optional[int] = None
     um_lanes_run: Optional[int] = None

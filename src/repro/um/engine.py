@@ -31,6 +31,32 @@ exact on all four outputs: the engine evaluates the same expressions with
 the same scatter/gather ordering, only with the migration chunk's lanes
 padded to the bucketed allocation (inactive lanes are routed to dump
 slots that no live index ever reads).
+
+Temporal splitting
+------------------
+The paging scan cannot shard — pages do not partition by address under
+chunked migration — so its only depth lever is the temporal split from
+``repro.core.tsplit``: cut the trace into T segments run as extra vmap
+lanes from guessed boundary carries, then re-run with each guess replaced
+by its predecessor segment's actual final carry until the boundaries reach
+a fixed point (chaining converges in <= T rounds; typically 2).  Three
+properties make the handoff exact and fast:
+
+  * **Hotness needs no speculation** — the access counters are a pure
+    function of the page stream, so every segment's boundary hotness is
+    the host-side prefix ``bincount``, exact from round one.  Replay and
+    pad steps route their increments to a dump slot so the in-segment
+    counts stay globally exact.
+  * **The frame ring is compared in gauge-canonical form** — every frame
+    access is relative to the clock hand ``ptr``, so rotating ``frames``
+    and ``ptr`` together is a symmetry of the dynamics.  Boundary carries
+    are canonicalized (ring rotated so ``ptr = 0``, slack and dump slots
+    blanked) before the fixed-point equality, which would otherwise chase
+    an ever-rotating hand and never converge.
+  * Counters are emitted only by *real* core steps (replay prefixes and
+    padding are gated off) and only the converged round's counters are
+    kept, so all four outputs stay bit-for-bit equal to the sequential
+    reference at every T.
 """
 
 from __future__ import annotations
@@ -49,6 +75,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.core import costmodel, tsplit
 from repro.core.timing import COLUMN_BYTES, UM_PAGE_BYTES, HMSConfig
 from repro.core.traces import Trace
 
@@ -155,6 +182,8 @@ class _UMKey:
     frames_alloc: int       # bucketed frame-array allocation (batch max)
     chunk_alloc: int        # bucketed migration-chunk lanes (batch max)
     phases: int             # counter segments (1 for unphased traces)
+    t_segments: int = 1     # temporal segments (1 = plain sequential scan)
+    replay: int = 0         # replay-prefix steps per segment (T>1 only)
 
 
 # Pad value for eviction-window lanes beyond the runtime window: sorts after
@@ -170,8 +199,13 @@ def _make_um_engine(key: _UMKey):
     P = key.phases
     DUMP = PA                       # dump page slot (arrays sized PA + 1)
     FDUMP = FA                      # dump frame slot
+    split = key.t_segments > 1
 
-    def engine(xs, p):
+    # The split engine takes boundary carries per segment and returns them
+    # finalized (the stitch driver chains them); the T=1 engine keeps the
+    # exact (xs, p) -> counters shape it always had, with no carry traffic
+    # and a dump-free hotness array.
+    def _impl(xs, p, carry, use_replay):
         page = jnp.asarray(xs["page"])
         wr = jnp.asarray(xs["is_write"])
         phase = jnp.asarray(xs["phase"])
@@ -189,8 +223,15 @@ def _make_um_engine(key: _UMKey):
 
         def step(carry, x):
             resident, dirty, frames, ptr, hotness = carry
-            pp, w = x
-            hotness = hotness.at[pp].add(1)
+            if split:
+                # rl: real core step (counts, increments hotness)
+                # lv: state-updates live (core steps always; replay steps
+                #     when the traced use_replay flag is on; pads never)
+                pp, w, rl, lv = x
+                hotness = hotness.at[jnp.where(rl, pp, DUMP)].add(1)
+            else:
+                pp, w = x
+                hotness = hotness.at[pp].add(1)
             is_res = resident[pp]
 
             # Link-mode select (the reference's Python branch, as data):
@@ -199,6 +240,8 @@ def _make_um_engine(key: _UMKey):
             hot_mig = (~is_res) & (hotness[pp] >= hot_thresh)
             migrate = jnp.where(nvlink, hot_mig, ~is_res)
             remote = nvlink & (~is_res) & ~hot_mig
+            if split:
+                migrate = migrate & lv
             fault = migrate
 
             # Migration body.  The reference wraps this in lax.cond; here
@@ -236,34 +279,71 @@ def _make_um_engine(key: _UMKey):
                 jnp.where(newly, idx, ev_pages))
             ptr = ((ptr + mig_n) % n_frames).astype(jnp.int32)
 
-            dirty = dirty.at[pp].set(dirty[pp] | (w & resident[pp]))
-            y = (fault, remote,
-                 mig_n.astype(jnp.int32), wb_n.astype(jnp.int32))
+            if split:
+                dpp = jnp.where(lv, pp, DUMP)
+                dirty = dirty.at[dpp].set(dirty[dpp] | (w & resident[dpp]))
+                y = (fault & rl, remote & rl,
+                     jnp.where(rl, mig_n, 0).astype(jnp.int32),
+                     jnp.where(rl, wb_n, 0).astype(jnp.int32))
+            else:
+                dirty = dirty.at[pp].set(dirty[pp] | (w & resident[pp]))
+                y = (fault, remote,
+                     mig_n.astype(jnp.int32), wb_n.astype(jnp.int32))
             return (resident, dirty, frames, ptr, hotness), y
 
-        init = (
-            jnp.zeros((PA + 1,), jnp.bool_),
-            jnp.zeros((PA + 1,), jnp.bool_),
-            jnp.full((FA + 1,), -1, jnp.int32),
-            jnp.zeros((), jnp.int32),
-            jnp.zeros((PA,), jnp.int32),
-        )
-        _, (fault, remote, mig, wb) = jax.lax.scan(
-            step, init, (page, wr), unroll=4)
+        if split:
+            rl_all = jnp.asarray(xs["real"])
+            if key.replay > 0:
+                lv_all = rl_all | (jnp.asarray(xs["replay"]) & use_replay)
+            else:
+                lv_all = rl_all
+
+            def seg_scan(c, seg_xs):
+                return jax.lax.scan(step, c, seg_xs, unroll=4)
+
+            # one vmap lane per temporal segment; each runs from its
+            # guessed boundary carry and returns it finalized
+            carry_f, (fault, remote, mig, wb) = jax.vmap(seg_scan)(
+                tuple(jnp.asarray(a) for a in carry),
+                (page, wr, rl_all, lv_all))
+        else:
+            init = (
+                jnp.zeros((PA + 1,), jnp.bool_),
+                jnp.zeros((PA + 1,), jnp.bool_),
+                jnp.full((FA + 1,), -1, jnp.int32),
+                jnp.zeros((), jnp.int32),
+                jnp.zeros((PA,), jnp.int32),
+            )
+            carry_f, (fault, remote, mig, wb) = jax.lax.scan(
+                step, init, (page, wr), unroll=4)
 
         # Per-phase reduction (trace-order segment sums); totals are the
-        # sums of these vectors, so phase attribution is exact.
+        # sums of these vectors, so phase attribution is exact.  Split
+        # lanes flatten (T, L) row-major — core steps stay in trace order
+        # and gated replay/pad steps contribute exact zeros.
+        seg_ids = phase.reshape(-1) if split else phase
+
         def red(v):
             return jax.ops.segment_sum(
-                jnp.asarray(v, jnp.float64), phase, num_segments=P)
+                jnp.asarray(v, jnp.float64).reshape(-1), seg_ids,
+                num_segments=P)
 
-        return {
+        C = {
             "um_faults": red(fault),
             "um_migrated": red(mig),
             "um_writebacks": red(wb),
             "um_remote_cols": red(remote),
         }
+        if split:
+            return carry_f, C
+        return C
 
+    if split:
+        def engine(xs, p, carry, use_replay):
+            return _impl(xs, p, carry, use_replay)
+    else:
+        def engine(xs, p):
+            return _impl(xs, p, None, None)
     return engine
 
 
@@ -285,7 +365,8 @@ _PAGE_CACHE: "weakref.WeakKeyDictionary[Trace, tuple]" = \
 
 def _fingerprint(key: _UMKey, width: int) -> str:
     return (f"um:n{key.n}:P{key.pages_alloc}:F{key.frames_alloc}"
-            f":c{key.chunk_alloc}:p{key.phases}:w{width}")
+            f":c{key.chunk_alloc}:p{key.phases}"
+            f":T{key.t_segments}r{key.replay}:w{width}")
 
 
 def um_engine_trace_count(key: _UMKey) -> int:
@@ -334,16 +415,19 @@ def _engine_for(key: _UMKey):
     if key not in _UM_ENGINE_CACHE:
         base = _make_um_engine(key)
 
-        def counting(xs, p):
+        def counting(*args):
             # runs once per jit (re-)trace; the span measures staging time
             _UM_TRACE_COUNTS[key] = _UM_TRACE_COUNTS.get(key, 0) + 1
             with obs.span("compile", engine="um"):
-                return base(xs, p)
+                return base(*args)
 
         # one vmapped engine for every batch width; jit re-specializes per
-        # width on its own (same pattern as the HMS batched engine)
+        # width on its own (same pattern as the HMS batched engine).  Split
+        # engines additionally map the boundary carries per spec lane and
+        # share the traced use_replay flag.
+        in_axes = (None, 0, 0, None) if key.t_segments > 1 else (None, 0)
         _UM_ENGINE_CACHE[key] = jax.jit(
-            jax.vmap(counting, in_axes=(None, 0)))
+            jax.vmap(counting, in_axes=in_axes))
     return _UM_ENGINE_CACHE[key]
 
 
@@ -355,17 +439,113 @@ def _page_stream(trace: Trace):
     return _PAGE_CACHE[trace]
 
 
-def um_group_key(trace: Trace, specs: Sequence[UMSpec]) -> _UMKey:
+def um_group_key(trace: Trace, specs: Sequence[UMSpec],
+                 t_segments: int = 1, replay: int = 0) -> _UMKey:
     """The engine key a batch of specs shares: allocations are bucketed
     group-wide maxima, so one compiled scan covers the whole sweep."""
     _, n_pages = _page_stream(trace)
+    t_segments = max(1, min(int(t_segments), trace.n))
     return _UMKey(
         n=trace.n,
         pages_alloc=_bucket(n_pages),
         frames_alloc=_bucket(max(s.n_frames for s in specs)),
         chunk_alloc=_bucket(max(s.chunk for s in specs)),
         phases=trace.n_phases,
+        t_segments=t_segments,
+        replay=replay if t_segments > 1 else 0,
     )
+
+
+# ---------------------------------------------------------------------------
+# Temporal split: gathered segment streams + the fixed-point stitch driver.
+# ---------------------------------------------------------------------------
+
+def _um_split_inputs(trace: Trace, key: _UMKey, page, phase):
+    """Gathered ``(T, L)`` segment streams for a split run.  Core steps
+    execute their own trace records in order; replay-prefix steps re-gather
+    the window just before each boundary; pads clamp to the last record and
+    are masked dead by ``real``."""
+    pos = np.arange(trace.n, dtype=np.int32).reshape(1, -1)
+    sp = tsplit.split_positions(pos, trace.n, key.t_segments, key.replay)
+    spos, gpos = sp["spos"][0], sp["gpos"][0]
+    xs = {
+        "page": page[gpos],
+        "is_write": trace.is_write.astype(bool)[gpos],
+        "phase": phase[gpos],
+        "real": spos < trace.n,
+    }
+    if key.replay > 0:
+        xs["replay"] = sp["replay"][0]
+    return xs
+
+
+def _run_um_split(key: _UMKey, fn, xs, p, page, n_pages: int, width: int):
+    """Drive the fixed-point stitch for a split UM run (see the module
+    docstring): hotness boundaries are exact host-side prefix bincounts,
+    residency/dirty/frame carries are chained in gauge-canonical form
+    (frame ring rotated to ptr=0, slack and dump slots blanked), and only
+    the converged round's counters are returned.  Returns ``(C, rounds)``
+    with rounds including the replay warm-up, or raises
+    :class:`repro.core.tsplit.StitchError` past the round bound."""
+    T, PA, FA = key.t_segments, key.pages_alloc, key.frames_alloc
+    core = -(-key.n // T)
+    n_frames = np.asarray(p["n_frames"], np.int64)
+
+    hot = np.zeros((T, PA + 1), np.int32)
+    for t in range(1, T):
+        hot[t, :PA] = np.bincount(page[:t * core], minlength=PA)
+    hot = np.broadcast_to(hot, (width, T, PA + 1)).copy()
+
+    g0 = (
+        np.zeros((width, T, PA + 1), bool),          # resident
+        np.zeros((width, T, PA + 1), bool),          # dirty
+        np.full((width, T, FA + 1), -1, np.int32),   # frames
+        np.zeros((width, T), np.int32),              # ptr (canonical: 0)
+        hot,
+    )
+
+    def run(g, use_replay):
+        carry_f, C = fn(xs, p, g, np.bool_(use_replay))
+        return (tuple(np.asarray(a) for a in carry_f),
+                {k: np.asarray(v, np.float64) for k, v in C.items()})
+
+    def advance(g, out):
+        res_o, dir_o, fr_o = out[0], out[1], out[2]
+        ptr_o = np.asarray(out[3], np.int64)
+        res_c = res_o.copy()
+        res_c[..., n_pages:] = False
+        dir_c = dir_o.copy()
+        dir_c[..., n_pages:] = False
+        fr_c = np.full_like(fr_o, -1)
+        for w in range(width):       # per lane: n_frames varies per spec
+            F = int(n_frames[w])
+            idx = (ptr_o[w][:, None] + np.arange(F)[None, :]) % F
+            fr_c[w, :, :F] = np.take_along_axis(fr_o[w, :, :F], idx, axis=1)
+        cold_pg = np.zeros((width, 1, PA + 1), bool)
+        cold_fr = np.full((width, 1, FA + 1), -1, np.int32)
+        return (
+            np.concatenate([cold_pg, res_c[:, :-1]], axis=1),
+            np.concatenate([cold_pg, dir_c[:, :-1]], axis=1),
+            np.concatenate([cold_fr, fr_c[:, :-1]], axis=1),
+            np.zeros((width, T), np.int32),
+            hot,                     # pinned exact — never chained
+        )
+
+    def equal(a, b):
+        # ptr and hotness are canonical/pinned by construction; the fixed
+        # point lives in (resident, dirty, frames)
+        return all(np.array_equal(a[i], b[i]) for i in range(3))
+
+    g, extra = g0, 0
+    if key.replay > 0:
+        # warm-up round: replay prefixes live purely to improve the first
+        # boundary guesses; its counters are never accepted
+        out, _ = run(g, True)
+        g = advance(g, out)
+        extra = 1
+    C, rounds = tsplit.stitch(lambda gg, _rnd: run(gg, False), g, advance,
+                              equal, max_rounds=T + 1)
+    return C, rounds + extra
 
 
 # ---------------------------------------------------------------------------
@@ -397,18 +577,15 @@ def simulate_um_many(trace: Trace, specs: Sequence[UMSpec]) -> List[UMResult]:
 
     key = None
     compiled = False
+    t_rounds = None
     if run_specs:
-        key = um_group_key(trace, run_specs)
-        fn = _engine_for(key)
+        t_seg = costmodel.choose_um_split(trace.n, len(run_specs))
+        replay = tsplit.replay_prefix() if t_seg > 1 else 0
+        key = um_group_key(trace, run_specs, t_seg, replay)
         if n_ph > 1:
             phase = trace.phase_id
         else:
             phase = np.zeros((trace.n,), np.int32)
-        xs = {
-            "page": page,
-            "is_write": trace.is_write.astype(bool),
-            "phase": phase,
-        }
         p = {
             "n_pages": np.full(len(run_specs), n_pages, np.int32),
             "n_frames": np.asarray([s.n_frames for s in run_specs], np.int32),
@@ -417,12 +594,33 @@ def simulate_um_many(trace: Trace, specs: Sequence[UMSpec]) -> List[UMResult]:
             "hot_thresh": np.asarray([s.hot_thresh for s in run_specs],
                                      np.int32),
         }
-        before = _UM_TRACE_COUNTS.get(key, 0)
         with obs.span("um_scan", engine="um", lanes=len(run_specs),
                       trace=trace.name):
-            Cs = fn(xs, p)
-            Cs = {k: np.asarray(v, np.float64) for k, v in Cs.items()}
-        compiled = _UM_TRACE_COUNTS.get(key, 0) > before
+            if key.t_segments > 1:
+                fn = _engine_for(key)
+                before = _UM_TRACE_COUNTS.get(key, 0)
+                try:
+                    with obs.span("stitch", engine="um",
+                                  segments=key.t_segments,
+                                  replay=key.replay):
+                        Cs, t_rounds = _run_um_split(
+                            key, fn,
+                            _um_split_inputs(trace, key, page, phase),
+                            p, page, n_pages, len(run_specs))
+                    compiled = _UM_TRACE_COUNTS.get(key, 0) > before
+                except tsplit.StitchError:
+                    # round-bound guard tripped: never ship speculative
+                    # counters — fall back to the exact unsplit scan
+                    key = dataclasses.replace(key, t_segments=1, replay=0)
+            if key.t_segments == 1:
+                fn = _engine_for(key)
+                before = _UM_TRACE_COUNTS.get(key, 0)
+                Cs = fn({"page": page,
+                         "is_write": trace.is_write.astype(bool),
+                         "phase": phase}, p)
+                Cs = {k: np.asarray(v, np.float64) for k, v in Cs.items()}
+                compiled = _UM_TRACE_COUNTS.get(key, 0) > before
+                t_rounds = 1
         obs.engine_run(_fingerprint(key, len(run_specs)), compiled)
         _LANES_RUN += len(run_specs)
         for j, s in enumerate(run_specs):
@@ -449,6 +647,9 @@ def simulate_um_many(trace: Trace, specs: Sequence[UMSpec]) -> List[UMResult]:
                 "um_writebacks": r.phase_writebacks,
                 "um_remote_cols": r.phase_remote_cols,
             } for r in out]),
+            t_segments=key.t_segments if key is not None else None,
+            stitch_rounds=t_rounds,
+            replay_prefix=key.replay if key is not None else None,
             um_lanes_requested=len(specs),
             um_lanes_run=len(run_specs),
             um_lanes_deduped=len(specs) - len(run_specs),

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro import obs
-from repro.core import HMSConfig, simulate, simulate_many
+from repro.core import HMSConfig, costmodel, simulate, simulate_many, tsplit
 from repro.core._reference import reference_counters
 from repro.core.simulator import (_COUNTERS, _engine_key, engine_trace_count,
                                   set_forced_shards, set_max_shards)
@@ -173,6 +173,67 @@ def test_shard_engine_matches_sequential_scan():
     for k in _COUNTERS:
         np.testing.assert_allclose(sharded[k], seq[k], rtol=1e-12, atol=0,
                                    err_msg=f"shard-parallel diverged on {k}")
+
+
+# ---------------------------------------------------------------------------
+# Temporal splitting: every (S, T) execution shape is the same simulator.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,t_seg,replay",
+                         [(1, 4, 0), (4, 2, 0), (2, 4, 16), (1, 8, 32)],
+                         ids=["T4", "S4T2", "S2T4r16", "T8r32"])
+def test_temporal_split_parity_vs_reference(s, t_seg, replay):
+    """Temporally split execution (with and without spatial shards and
+    replay prefixes) reproduces the seed scan engine on the conflict-heavy
+    aliasing trace, counter for counter."""
+    t = _aliasing_trace()
+    cfg = HMSConfig(footprint=t.footprint, r_hbm=0.1)
+    ref = reference_counters(t, cfg)
+    old_s = set_forced_shards(s)
+    old_t = costmodel.set_forced_tsplit(t_seg)
+    old_r = tsplit.set_replay_prefix(replay)
+    try:
+        key = _engine_key(t, cfg)
+        assert key.shards == s and key.t_segments == t_seg
+        new = simulate(t, cfg).counters
+    finally:
+        set_forced_shards(old_s)
+        costmodel.set_forced_tsplit(old_t)
+        tsplit.set_replay_prefix(old_r)
+    for k in _COUNTERS:
+        np.testing.assert_allclose(
+            new[k], ref[k], rtol=1e-9, atol=1e-6,
+            err_msg=f"counter {k} diverged at S={s} T={t_seg}")
+
+
+@pytest.mark.parametrize(
+    "kw", GOLDEN_CONFIGS,
+    ids=["hms", "tad", "no_bypass", "no_2nd", "bear", "mccache",
+         "redcache", "no_ctc"])
+def test_temporal_split_matches_unsplit(kw):
+    """Stitched (S=2, T=4, replay) execution is bit-for-bit the unsplit
+    (S=1, T=1) scan for every golden policy — not approximately: the
+    stitch only terminates at an exact fixed point."""
+    t = _golden_trace()
+    cfg = HMSConfig(footprint=t.footprint, **kw)
+    old_s = set_forced_shards(1)
+    old_t = costmodel.set_forced_tsplit(1)
+    try:
+        base = simulate(t, cfg).counters
+    finally:
+        set_forced_shards(old_s)
+        costmodel.set_forced_tsplit(old_t)
+    old_s = set_forced_shards(2)
+    old_t = costmodel.set_forced_tsplit(4)
+    old_r = tsplit.set_replay_prefix(16)
+    try:
+        got = simulate(t, cfg).counters
+    finally:
+        set_forced_shards(old_s)
+        costmodel.set_forced_tsplit(old_t)
+        tsplit.set_replay_prefix(old_r)
+    for k in _COUNTERS:
+        np.testing.assert_array_equal(got[k], base[k], err_msg=f"{kw}: {k}")
 
 
 def test_event_counters_are_exact_integers():

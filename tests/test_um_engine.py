@@ -14,7 +14,8 @@ import numpy as np
 import pytest
 
 from repro import obs, um
-from repro.core import HMSConfig, make_trace, simulate, simulate_many
+from repro.core import HMSConfig, costmodel, make_trace, simulate, \
+    simulate_many, tsplit
 from repro.core.simulator import _um_overflow_config
 from repro.core.timing import COLUMN_BYTES, UM_PAGE_BYTES
 from repro.core.traces import Trace
@@ -233,6 +234,57 @@ def test_nvlink_fault_term_is_zero():
     assert r.terms["fault"] == 0.0
     assert r.counters["um_remote_cols"] > 0
     assert r.traffic_bytes["link"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Temporal splitting: the paging scan's only depth lever.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nvlink", [False, True], ids=["fault", "nvlink"])
+@pytest.mark.parametrize("t_seg,replay", [(4, 0), (8, 32)],
+                         ids=["T4", "T8r32"])
+def test_temporal_split_parity_vs_reference_um(nvlink, t_seg, replay):
+    """A temporally split UM run (gauge-canonical frame-ring stitch, exact
+    hotness boundaries) matches the frozen sequential scan on all four
+    outputs in both link modes."""
+    t = _um_trace()
+    cfg = HMSConfig(footprint=t.footprint, r_hbm=0.4, organization="hbm")
+    ref = run_um_reference(t, cfg, nvlink=nvlink)
+    old_t = costmodel.set_forced_tsplit(t_seg)
+    old_r = tsplit.set_replay_prefix(replay)
+    try:
+        key = um.um_group_key(t, [um.um_spec(cfg, nvlink=nvlink)],
+                              t_segments=t_seg, replay=replay)
+        assert key.t_segments == t_seg and key.replay == replay
+        got = _totals(um.simulate_um(t, cfg, nvlink=nvlink))
+    finally:
+        costmodel.set_forced_tsplit(old_t)
+        tsplit.set_replay_prefix(old_r)
+    assert got == tuple(float(x) for x in ref)
+    assert (got[0] > 0) or (got[3] > 0)       # the case actually paged
+
+
+def test_temporal_split_phase_attribution_exact():
+    """Per-phase UM vectors at T=4 equal the unsplit vectors bit-for-bit
+    on a phased scenario trace (flattened segment-sum keeps trace order)."""
+    t1 = make_trace("moe_expert", n=5000)
+    t2 = make_trace("moe_expert", n=5000)
+    cfg = HMSConfig(footprint=t1.footprint, organization="hbm", r_hbm=0.5)
+    spec = um.um_spec(cfg)
+    old_t = costmodel.set_forced_tsplit(1)
+    try:
+        base = um.simulate_um_many(t1, [spec])[0]
+    finally:
+        costmodel.set_forced_tsplit(old_t)
+    old_t = costmodel.set_forced_tsplit(4)
+    try:
+        got = um.simulate_um_many(t2, [spec])[0]
+    finally:
+        costmodel.set_forced_tsplit(old_t)
+    assert base.faults > 0
+    for f in ("phase_faults", "phase_migrated", "phase_writebacks",
+              "phase_remote_cols"):
+        np.testing.assert_array_equal(getattr(got, f), getattr(base, f), f)
 
 
 def test_hot_threshold_is_runtime_data():
