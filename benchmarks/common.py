@@ -1,10 +1,12 @@
-"""Shared benchmark plumbing: timed simulator runs + CSV emission."""
+"""Shared benchmark plumbing: timed simulator runs, CSV emission, and the
+partial-artifact registry interrupted runs flush through (see
+``benchmarks.run``)."""
 
 from __future__ import annotations
 
 import os
 import time
-from typing import Dict, List
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -87,7 +89,43 @@ def host_metadata() -> Dict[str, object]:
         "env_repro_shards": os.environ.get("REPRO_SHARDS"),
         "env_repro_tsplit": os.environ.get("REPRO_TSPLIT"),
         "env_repro_bench_n": os.environ.get("REPRO_BENCH_N"),
+        "env_repro_faults": os.environ.get("REPRO_FAULTS"),
+        "env_repro_retry": os.environ.get("REPRO_RETRY"),
+        "env_repro_sweep_ckpt": os.environ.get("REPRO_SWEEP_CKPT"),
     }
+
+
+# ---------------------------------------------------------------------------
+# Partial-artifact registry: suites register a writer that dumps their
+# in-progress BENCH_*.json (marked "partial": true) so an interrupted run
+# (SIGINT / SIGTERM / injected kill fault) still lands a resumable artifact.
+# Writers close over the suite's mutable detail dict — registering early and
+# unregistering right before the final (complete) write is the contract.
+# ---------------------------------------------------------------------------
+
+_PARTIAL_WRITERS: Dict[str, Callable[[], Optional[str]]] = {}
+
+
+def register_partial(name: str, fn: Callable[[], Optional[str]]) -> None:
+    _PARTIAL_WRITERS[name] = fn
+
+
+def unregister_partial(name: str) -> None:
+    _PARTIAL_WRITERS.pop(name, None)
+
+
+def flush_partials() -> List[str]:
+    """Run every registered partial writer (best-effort: one broken writer
+    must not stop the others mid-shutdown).  Returns the paths written."""
+    written = []
+    for name, fn in list(_PARTIAL_WRITERS.items()):
+        try:
+            p = fn()
+            if p:
+                written.append(p)
+        except Exception as e:             # noqa: BLE001 — shutdown path
+            print(f"# partial flush of {name} failed: {e}")
+    return written
 
 
 def emit(rows: List[tuple]):

@@ -27,10 +27,13 @@ from typing import Iterator, List, Optional, Tuple
 INFO_SUBTREES = ("host", "figures")      # identity / output paths
 TIMING_SUFFIXES = ("_s", "us_per_point", "us_per_call")
 # execution-shape keys (shard counts, temporal segments, stitch rounds,
-# replay prefixes) and measured speedups legitimately vary across hosts —
-# the parity suites pin the *counters* regardless of shape
-INFO_MARKERS = ("shard", "speedup", "ts", "stitch", "segment", "replay")
-INFO_SUFFIXES = ("depth",)
+# replay prefixes), measured speedups, and resilience bookkeeping (which
+# degradation-ladder rung ran, checkpoint replay state) legitimately vary
+# across hosts and runs — the parity suites pin the *counters* regardless
+# of shape, and "partial" only ever flips false->absent on a finished run
+INFO_MARKERS = ("shard", "speedup", "ts", "stitch", "segment", "replay",
+                "degradation", "ladder", "resume", "ckpt", "partial")
+INFO_SUFFIXES = ("depth", "retries")
 
 
 def _classify(path: Tuple[str, ...]) -> str:

@@ -278,7 +278,8 @@ def sweep_design_space(results: Dict) -> List[tuple]:
     from repro.core.simulator import (_engine_key, group_engine_key,
                                       set_max_shards)
 
-    from .common import bench_n, trace
+    from .common import (bench_n, host_metadata, register_partial, trace,
+                         unregister_partial)
 
     grid = [{"tag_layout": lay, "ctc_fraction": frac, "scm_mode": mode}
             for lay in ("amil", "tad")
@@ -287,6 +288,19 @@ def sweep_design_space(results: Dict) -> List[tuple]:
     sweep_workloads = ["bfs_tu", "sssp_ttc", "kcore"]
     rows = []
     detail = {}
+
+    art = os.path.join(os.path.dirname(__file__), "artifacts")
+
+    def _write_partial():
+        os.makedirs(art, exist_ok=True)
+        path = os.path.join(art, "BENCH_sweep.json")
+        with open(path, "w") as f:
+            json.dump({"partial": True, "n": bench_n(),
+                       "grid_points": len(grid), "host": host_metadata(),
+                       "workloads": dict(detail)}, f, indent=1)
+        return path
+
+    register_partial("sweep", _write_partial)
 
     def timed(fn, reps=1):
         best = None
@@ -404,9 +418,7 @@ def sweep_design_space(results: Dict) -> List[tuple]:
     results["sweep"] = detail
     results["sweep_tsplit"] = tsec
 
-    from .common import host_metadata
-
-    art = os.path.join(os.path.dirname(__file__), "artifacts")
+    unregister_partial("sweep")
     os.makedirs(art, exist_ok=True)
     figs = _tsplit_figure(tsec, art)
     with open(os.path.join(art, "BENCH_sweep.json"), "w") as f:

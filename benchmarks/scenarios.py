@@ -22,7 +22,8 @@ import os
 import time
 from typing import Dict, List
 
-from .common import bench_n, host_metadata
+from .common import (bench_n, host_metadata, register_partial,
+                     unregister_partial)
 
 OVERSUB_GRID = (0.5, 1.0, 2.0, 4.0)
 
@@ -117,6 +118,19 @@ def run(results: Dict) -> List[tuple]:
     n = bench_n()
     rows = []
     detail = {}
+    art = os.path.join(os.path.dirname(__file__), "artifacts")
+
+    def _write_partial():
+        os.makedirs(art, exist_ok=True)
+        path = os.path.join(art, "BENCH_scenarios.json")
+        with open(path, "w") as f:
+            json.dump({"partial": True, "n": n,
+                       "oversub_grid": list(OVERSUB_GRID),
+                       "host": host_metadata(),
+                       "scenarios": dict(detail)}, f, indent=1)
+        return path
+
+    register_partial("scenarios", _write_partial)
     for name, scn in sorted(SCENARIOS.items()):
         base = scn.compile(n=n)
         cfg_fp = base.footprint          # memory system pinned at oversub=1
@@ -159,7 +173,7 @@ def run(results: Dict) -> List[tuple]:
                      f"|hitR@1.0={nominal['hit_rate_read']:.2f}"))
     results["scenarios"] = detail
 
-    art = os.path.join(os.path.dirname(__file__), "artifacts")
+    unregister_partial("scenarios")
     os.makedirs(art, exist_ok=True)
     figs = _figures(detail, art)
     with open(os.path.join(art, "BENCH_scenarios.json"), "w") as f:

@@ -31,7 +31,8 @@ import os
 import time
 from typing import Dict, List
 
-from .common import bench_n, host_metadata, trace
+from .common import (bench_n, host_metadata, register_partial, trace,
+                     unregister_partial)
 
 REL_GRID = (1.25, 1.5, 2.0, 4.0)
 MODES = (False, True)                      # fault-driven, nvlink
@@ -49,6 +50,19 @@ def run(results: Dict) -> List[tuple]:
     n = bench_n()
     rows = []
     detail = {}
+    art = os.path.join(os.path.dirname(__file__), "artifacts")
+
+    def _write_partial():
+        os.makedirs(art, exist_ok=True)
+        path = os.path.join(art, "BENCH_um.json")
+        with open(path, "w") as f:
+            json.dump({"partial": True, "n": n, "rel_grid": list(REL_GRID),
+                       "modes": ["fault", "nvlink"],
+                       "host": host_metadata(),
+                       "workloads": dict(detail)}, f, indent=1)
+        return path
+
+    register_partial("um", _write_partial)
     for w in UM_WORKLOADS:
         t = trace(w)
         cfgs = {(rel, nv): HMSConfig(footprint=t.footprint,
@@ -118,7 +132,7 @@ def run(results: Dict) -> List[tuple]:
     tsec = _tsplit_curve(rows)
     results["um_tsplit"] = tsec
 
-    art = os.path.join(os.path.dirname(__file__), "artifacts")
+    unregister_partial("um")
     os.makedirs(art, exist_ok=True)
     figs = _tsplit_figure(tsec, art)
     with open(os.path.join(art, "BENCH_um.json"), "w") as f:

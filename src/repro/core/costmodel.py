@@ -84,6 +84,20 @@ def rounds_estimate(t_segments: int) -> float:
     return 2.0 + 0.25 * (math.log2(t_segments) - 1.0)
 
 
+def degradation_ladder(shards: int, t_segments: int) -> list:
+    """The guarded engines' deterministic descent over execution shapes
+    when a rung fails (see ``repro.resilience.guard``): the planned
+    (S, T), then temporal-split off (S, 1), then the fully sequential
+    (1, 1).  Every shape reproduces the sequential scan bit-for-bit, so
+    descending trades speed for survival, never counters."""
+    out = [(int(shards), int(t_segments))]
+    if t_segments > 1:
+        out.append((int(shards), 1))
+    if shards > 1:
+        out.append((1, 1))
+    return out
+
+
 # --- caps + overrides ------------------------------------------------------
 
 _MAX_SHARDS = int(os.environ.get("REPRO_SHARDS", "64"))

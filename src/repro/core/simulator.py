@@ -122,6 +122,12 @@ from .traces import Trace, geometry_key, preprocess, shard_depth, shard_plan
 # repro.um is imported first.  Attributes are only touched at call time.
 from repro import um as _um
 
+# Resilience layer (module imports only: the package does all its
+# repro.core imports lazily, so this edge is order-safe too).
+from repro.resilience import guard as _guard
+from repro.resilience import sweepckpt as _sweepckpt
+from repro.resilience import validate as _rvalidate
+
 _COUNTERS = (
     # bus traffic, in 32B columns
     "demand_dram_rd", "demand_dram_wr", "demand_scm_rd", "demand_scm_wr",
@@ -329,13 +335,15 @@ def _dice(n: int) -> np.ndarray:
 def _engine_inputs(trace: Trace, cfg: HMSConfig, pre,
                    key: _EngineKey) -> Dict[str, np.ndarray]:
     # packed-word layout limits (tag<<10 must stay inside int32; affinity
-    # levels live in an 8-bit field; CTC tag+1 in a 23-bit field)
-    assert int(pre["tag"].max(initial=0)) < (1 << 21), "tag overflows packing"
-    assert cfg.n_levels <= 256, "affinity level overflows 8-bit packing"
+    # levels live in an 8-bit field; CTC tag+1 in a 23-bit field) — raised
+    # as structured EngineInvariantErrors so python -O keeps the guarantee
+    _rvalidate.check_hms_packing(
+        trace.name, tag_max=int(pre["tag"].max(initial=0)),
+        n_levels=cfg.n_levels)
     shards, depth = key.shards, key.depth
     plan = shard_plan(trace, cfg, shards)
-    assert int(plan["rg_local"].max(initial=0)) < (1 << 23) - 1, (
-        "row group overflows CTC tag packing")
+    _rvalidate.check_hms_packing(
+        trace.name, rg_max=int(plan["rg_local"].max(initial=0)))
     pos = plan["pos"]
     if plan["depth"] < depth:           # pad to the engine's (group) depth
         pad = np.full((shards, depth - plan["depth"]), trace.n, np.int32)
@@ -437,7 +445,7 @@ def _make_engine(key: _EngineKey):
         elif policy == "mccache":
             cand = ~is_write
         else:
-            raise ValueError(policy)
+            raise _rvalidate.unknown_policy_error(policy)
 
         # ---- the sequential core: only genuinely stateful arrays ----------
         # The DRAM-cache metadata (tag, affinity level, dirty, valid) packs
@@ -769,8 +777,12 @@ def _fingerprint(key: _EngineKey, width: int) -> str:
 
 def _obs_hms_record(entry: str, trace: Trace, key: _EngineKey, width: int,
                     compiled: bool, wall_s: float, digest: str,
-                    rounds: int = 1) -> None:
-    """Build + emit one HMS ledger record (caller gates on obs.enabled())."""
+                    rounds: int = 1, outcome=None) -> None:
+    """Build + emit one HMS ledger record (caller gates on obs.enabled()).
+    ``key`` is the engine key that actually produced the counters (the
+    degradation ladder may have descended from the planned one);
+    ``outcome`` is the guard's :class:`~repro.resilience.guard
+    .LadderOutcome`."""
     obs.record(obs.RunRecord(
         entry=entry, engine="hms", trace=trace.name, n=trace.n,
         phases=key.phases, engine_key=_fingerprint(key, width),
@@ -779,6 +791,10 @@ def _obs_hms_record(entry: str, trace: Trace, key: _EngineKey, width: int,
         load_imbalance=key.shards * key.depth / max(1, key.n),
         t_segments=key.t_segments, stitch_rounds=rounds,
         replay_prefix=key.replay,
+        ladder_rung=outcome.rung if outcome is not None else None,
+        retries=outcome.retries if outcome is not None else None,
+        degradations=(outcome.events or None)
+        if outcome is not None else None,
         host=obs.host_metadata(), **obs.git_info()))
 
 
@@ -937,89 +953,167 @@ def _run_split(key: _EngineKey, fn, xs, params, masks):
     return C, rounds + extra
 
 
+def _ladder_key(trace: Trace, cfgs: Sequence[HMSConfig], key: _EngineKey,
+                shards: int) -> _EngineKey:
+    """Rebuild the (group) engine key at a degraded shard count, temporal
+    split off.  Allocations are group-wide maxima, exactly like
+    :func:`group_engine_key` — a degraded rung is just a smaller planned
+    shape, not a special engine."""
+    plans = [shard_plan(trace, c, shards) for c in cfgs]
+    use_ctc = key.policy in _USES_CTC
+    return dataclasses.replace(
+        key, shards=shards,
+        depth=max(p["depth"] for p in plans),
+        lines_alloc=_bucket(max(p["lines_bound"] for p in plans)),
+        ctc_sets_alloc=_bucket(max(p["n_sets_local"] for p in plans))
+        if use_ctc else 1,
+        t_segments=1, replay=0)
+
+
+def _hms_ladder_keys(trace: Trace, cfgs: Sequence[HMSConfig],
+                     key: _EngineKey) -> List[_EngineKey]:
+    """Engine keys for the degradation rungs (S, T) -> (S, 1) -> (1, 1);
+    every one reproduces the sequential scan bit-for-bit."""
+    out = []
+    for s, t in costmodel.degradation_ladder(key.shards, key.t_segments):
+        if (s, t) == (key.shards, key.t_segments):
+            out.append(key)
+        elif s == key.shards:
+            out.append(dataclasses.replace(key, t_segments=1, replay=0))
+        else:
+            out.append(_ladder_key(trace, cfgs, key, s))
+    return out
+
+
+def _hms_reference_attempt(trace: Trace, cfgs: Sequence[HMSConfig],
+                           key: _EngineKey):
+    """Last ladder rung: the frozen seed engine.  It returns whole-trace
+    totals only (no per-phase vectors), so the ladder offers it for
+    unphased traces — where its counters are pinned bit-equal to the
+    batched engine's by ``tests/test_engine_parity.py``."""
+    from . import _reference
+    label = dataclasses.replace(key, shards=1, t_segments=1, replay=0)
+    per = [_reference.reference_counters(trace, c) for c in cfgs]
+    if len(cfgs) == 1:
+        C = {k: np.float64(v) for k, v in per[0].items()}
+    else:
+        C = {k: np.asarray([d[k] for d in per], np.float64)
+             for k in per[0]}
+    return C, 1, label, False
+
+
 def _run_hms_scan(trace: Trace, cfg: HMSConfig, pre,
                   key: _EngineKey | None = None,
                   entry: str = "simulate") -> Dict[str, np.ndarray]:
     if key is None:
         key = _engine_key(trace, cfg)
-    xs = _engine_inputs(trace, cfg, pre, key)
-    params = _runtime_params(cfg, _local_sets(trace, cfg, key))
-    fn = _engine_for(key)
-    before = _TRACE_COUNTS.get(key, 0)
+
+    def attempt(k: _EngineKey):
+        def thunk():
+            xs = _engine_inputs(trace, cfg, pre, k)
+            params = _runtime_params(cfg, _local_sets(trace, cfg, k))
+            fn = _engine_for(k)
+            before = _TRACE_COUNTS.get(k, 0)
+            rounds = 1
+            with obs.span("scan", engine="hms", policy=k.policy,
+                          shards=k.shards, batch=1):
+                if k.t_segments > 1:
+                    with obs.span("stitch", engine="hms",
+                                  segments=k.t_segments, replay=k.replay):
+                        masks = _stitch_masks(trace, cfg, k)
+                        C, rounds = _run_split(k, fn, xs, params, masks)
+                else:
+                    C = fn(xs, params)
+                    # scalar (unphased) or (n_phases,) vector per counter
+                    C = {kk: np.asarray(v, np.float64)
+                         for kk, v in C.items()}
+            return C, rounds, k, _TRACE_COUNTS.get(k, 0) > before
+        return thunk
+
+    rungs = [(f"S{k.shards}T{k.t_segments}", attempt(k))
+             for k in _hms_ladder_keys(trace, [cfg], key)]
+    if key.phases == 1:
+        rungs.append(
+            ("reference",
+             lambda: _hms_reference_attempt(trace, [cfg], key)))
     t0 = time.perf_counter()
-    rounds = 1
-    if key.t_segments > 1:
-        try:
-            with obs.span("scan", engine="hms", policy=key.policy,
-                          shards=key.shards, batch=1):
-                with obs.span("stitch", engine="hms",
-                              segments=key.t_segments, replay=key.replay):
-                    masks = _stitch_masks(trace, cfg, key)
-                    C, rounds = _run_split(key, fn, xs, params, masks)
-        except tsplit.StitchError:
-            # speculation failed to settle — run the exact unsplit engine
-            return _run_hms_scan(
-                trace, cfg, pre,
-                dataclasses.replace(key, t_segments=1, replay=0), entry)
-    else:
-        with obs.span("scan", engine="hms", policy=key.policy,
-                      shards=key.shards, batch=1):
-            C = fn(xs, params)
-            # scalar (unphased) or (n_phases,) vector (phased) per counter
-            C = {k: np.asarray(v, np.float64) for k, v in C.items()}
+    (C, rounds, used, compiled), outcome = _guard.run_ladder("hms", rungs)
     wall = time.perf_counter() - t0
-    compiled = _TRACE_COUNTS.get(key, 0) > before
-    obs.engine_run(_fingerprint(key, 1), compiled)
+    if outcome.rung != "reference":
+        obs.engine_run(_fingerprint(used, 1), compiled)
     if obs.enabled():
-        _obs_hms_record(entry, trace, key, 1, compiled, wall,
-                        obs.counter_digest(C), rounds)
+        _obs_hms_record(entry, trace, used, 1, compiled, wall,
+                        obs.counter_digest(C), rounds, outcome)
     return C
 
 
 def _run_hms_batch(trace: Trace, cfgs: Sequence[HMSConfig], key: _EngineKey,
                    entry: str = "simulate_many") -> Dict[str, np.ndarray]:
     """Run one compatible config group through the batched engine (with the
-    temporal-split stitch when the key says so).  Returns the stacked
-    counter dict: ``(batch,)`` or ``(batch, phases)`` float64 per counter."""
+    temporal-split stitch when the key says so), under the degradation
+    ladder — an OOM on the whole batch bisects into guarded halves.
+    Returns the stacked counter dict: ``(batch,)`` or ``(batch, phases)``
+    float64 per counter."""
     with obs.span("preprocess", trace=trace.name, batch=len(cfgs)):
-        xs_list = [_engine_inputs(trace, c, preprocess(trace, c), key)
-                   for c in cfgs]
-        xs = {k: np.stack([x[k] for x in xs_list]) for k in xs_list[0]}
-        params_list = [_runtime_params(c, _local_sets(trace, c, key))
-                       for c in cfgs]
-        params = {k: np.stack([p[k] for p in params_list])
-                  for k in params_list[0]}
-    fn = _batched_engine_for(key)
-    before = _TRACE_COUNTS.get(key, 0)
+        pres = [preprocess(trace, c) for c in cfgs]
+
+    def attempt(k: _EngineKey):
+        def thunk():
+            xs_list = [_engine_inputs(trace, c, p, k)
+                       for c, p in zip(cfgs, pres)]
+            xs = {kk: np.stack([x[kk] for x in xs_list])
+                  for kk in xs_list[0]}
+            params_list = [_runtime_params(c, _local_sets(trace, c, k))
+                           for c in cfgs]
+            params = {kk: np.stack([p[kk] for p in params_list])
+                      for kk in params_list[0]}
+            fn = _batched_engine_for(k)
+            before = _TRACE_COUNTS.get(k, 0)
+            rounds = 1
+            with obs.span("scan", engine="hms", policy=k.policy,
+                          shards=k.shards, batch=len(cfgs)):
+                if k.t_segments > 1:
+                    with obs.span("stitch", engine="hms",
+                                  segments=k.t_segments, replay=k.replay):
+                        pairs = [_stitch_masks(trace, c, k) for c in cfgs]
+                        masks = (np.stack([a for a, _ in pairs]),
+                                 np.stack([b for _, b in pairs]))
+                        Cs, rounds = _run_split(k, fn, xs, params, masks)
+                else:
+                    Cs = fn(xs, params)
+                    Cs = {kk: np.asarray(v, np.float64)
+                          for kk, v in Cs.items()}
+            return Cs, rounds, k, _TRACE_COUNTS.get(k, 0) > before
+        return thunk
+
+    def bisect():
+        # OOM relief: run the halves as their own guarded batches (they
+        # emit their own ledger records and may bisect further); the
+        # allocations in ``key`` are group maxima, so subsets reuse it.
+        h = len(cfgs) // 2
+        A = _run_hms_batch(trace, cfgs[:h], key, entry)
+        B = _run_hms_batch(trace, cfgs[h:], key, entry)
+        Cs = {kk: np.concatenate([A[kk], B[kk]], axis=0) for kk in A}
+        return Cs, 1, key, False
+
+    rungs = [(f"S{k.shards}T{k.t_segments}", attempt(k))
+             for k in _hms_ladder_keys(trace, cfgs, key)]
+    if key.phases == 1:
+        rungs.append(
+            ("reference",
+             lambda: _hms_reference_attempt(trace, cfgs, key)))
     t0 = time.perf_counter()
-    rounds = 1
-    if key.t_segments > 1:
-        try:
-            with obs.span("scan", engine="hms", policy=key.policy,
-                          shards=key.shards, batch=len(cfgs)):
-                with obs.span("stitch", engine="hms",
-                              segments=key.t_segments, replay=key.replay):
-                    pairs = [_stitch_masks(trace, c, key) for c in cfgs]
-                    masks = (np.stack([a for a, _ in pairs]),
-                             np.stack([b for _, b in pairs]))
-                    Cs, rounds = _run_split(key, fn, xs, params, masks)
-        except tsplit.StitchError:
-            return _run_hms_batch(
-                trace, cfgs,
-                dataclasses.replace(key, t_segments=1, replay=0), entry)
-    else:
-        with obs.span("scan", engine="hms", policy=key.policy,
-                      shards=key.shards, batch=len(cfgs)):
-            Cs = fn(xs, params)
-            Cs = {k: np.asarray(v, np.float64) for k, v in Cs.items()}
+    (Cs, rounds, used, compiled), outcome = _guard.run_ladder(
+        "hms_batch", rungs, bisect=bisect if len(cfgs) > 1 else None)
     wall = time.perf_counter() - t0
-    compiled = _TRACE_COUNTS.get(key, 0) > before
-    obs.engine_run(_fingerprint(key, len(cfgs)), compiled)
+    if outcome.rung not in ("reference", "bisect"):
+        obs.engine_run(_fingerprint(used, len(cfgs)), compiled)
     if obs.enabled():
         _obs_hms_record(
-            entry, trace, key, len(cfgs), compiled, wall,
+            entry, trace, used, len(cfgs), compiled, wall,
             obs.counter_digest([{k: v[j] for k, v in Cs.items()}
-                                for j in range(len(cfgs))]), rounds)
+                                for j in range(len(cfgs))]), rounds,
+            outcome)
     return Cs
 
 
@@ -1250,6 +1344,7 @@ def _single_tier_record(entry: str, trace: Trace, cfg: HMSConfig,
 def _simulate(trace: Trace, cfg: HMSConfig, nvlink: bool,
               entry: str) -> SimResult:
     cfg = cfg.validate()
+    _rvalidate.validate_trace(trace)
     org = cfg.organization
 
     if org in ("inf_hbm", "scm", "hbm"):
@@ -1298,7 +1393,13 @@ def simulate_many(trace: Trace, configs: Sequence[HMSConfig],
     ``simulate`` counter-for-counter.
     """
     configs = [c.validate() for c in configs]
+    _rvalidate.validate_trace(trace)
     results: List[SimResult | None] = [None] * len(configs)
+
+    # resumable sweeps: journal raw engine counters per (trace, config)
+    # so a killed sweep replays finished points from the checkpoint
+    ck = _sweepckpt.active()
+    tfp = _sweepckpt.trace_fingerprint(trace) if ck is not None else None
 
     um_specs = []
     for cfg in configs:
@@ -1322,12 +1423,25 @@ def simulate_many(trace: Trace, configs: Sequence[HMSConfig],
             results[i] = _simulate(trace, cfg, nvlink, "simulate_many")
 
     for (policy, sectors), idxs in groups.items():
+        if ck is not None:
+            pend = []
+            for i in idxs:
+                hit = ck.get_hms(tfp, configs[i], nvlink)
+                if hit is not None:
+                    results[i] = _finish_hms(trace, configs[i], hit, nvlink)
+                else:
+                    pend.append(i)
+            idxs = pend
+            if not idxs:
+                continue
         key = group_engine_key(trace, [configs[i] for i in idxs])
         if len(idxs) == 1:
             i = idxs[0]
             C = _run_hms_scan(trace, configs[i],
                               preprocess(trace, configs[i]), key,
                               entry="simulate_many")
+            if ck is not None:
+                ck.put_hms(tfp, configs[i], nvlink, C)
             results[i] = _finish_hms(trace, configs[i], C, nvlink)
             continue
         Cs = _run_hms_batch(trace, [configs[i] for i in idxs], key)
@@ -1335,6 +1449,10 @@ def simulate_many(trace: Trace, configs: Sequence[HMSConfig],
             for j, i in enumerate(idxs):
                 C = {k: np.asarray(v[j], np.float64)
                      for k, v in Cs.items()}
+                if ck is not None:
+                    # journal before finishing, so a kill mid-batch keeps
+                    # every lane the engine already produced
+                    ck.put_hms(tfp, configs[i], nvlink, C)
                 results[i] = _finish_hms(trace, configs[i], C, nvlink)
 
     return results

@@ -79,6 +79,17 @@ SCM_MODE_CAPACITY_VS_MLC = {"slc": 0.5, "mlc": 1.0, "tlc": 1.5}
 # probes one).
 POLICIES_WITH_CTC = ("hms", "no_bypass", "no_second_level")
 
+# The full vocabularies the validator and the engine dispatch share (one
+# source of truth for error messages listing the valid choices; see the
+# HMSConfig docstring for what each one models).
+POLICIES = (
+    "hms", "no_bypass", "no_bypass_no_ctc", "no_second_level",
+    "bear", "redcache", "mccache", "always_cache",
+)
+ORGANIZATIONS = ("hms", "separate", "hbm", "scm", "inf_hbm")
+TAG_LAYOUTS = ("amil", "tad")
+LINE_BYTES_CHOICES = (64, 128, 256, 512, 1024)
+
 
 @dataclasses.dataclass(frozen=True)
 class EnergyParams:
@@ -269,16 +280,12 @@ class HMSConfig:
         return max(1, (ratio - 1).bit_length())
 
     def validate(self) -> "HMSConfig":
-        assert self.organization in ("hms", "separate", "hbm", "scm", "inf_hbm")
-        assert self.policy in (
-            "hms", "no_bypass", "no_bypass_no_ctc", "no_second_level",
-            "bear", "redcache", "mccache", "always_cache",
-        )
-        assert self.tag_layout in ("amil", "tad")
-        assert self.scm_mode == "auto" or self.scm_mode in SCM_MODES
-        assert self.line_bytes in (64, 128, 256, 512, 1024)
-        assert ROW_BYTES % self.line_bytes == 0
-        return self
+        """Structured validation of every field (memoized per config):
+        raises :class:`repro.resilience.ValidationError` with the field
+        path and a fix hint — and, unlike the asserts this used to be,
+        survives ``python -O``."""
+        from repro.resilience.validate import validate_config
+        return validate_config(self)
 
 
 def metadata_bits_per_line(cfg: HMSConfig) -> int:

@@ -49,15 +49,10 @@ class Trace:
     phase_names: Tuple[str, ...] = ()
 
     def __post_init__(self):
-        assert self.col.ndim == 1 and self.col.shape == self.is_write.shape
-        limit = self.footprint // COLUMN_BYTES
-        assert int(self.col.max(initial=0)) < limit, (
-            f"trace {self.name} exceeds footprint"
-        )
+        # structured validation (field path + fix hint, survives python -O)
+        from repro.resilience.validate import validate_trace
+        validate_trace(self)
         if self.phase_id is not None:
-            assert self.phase_id.shape == self.col.shape
-            assert self.phase_names, "phased trace needs phase_names"
-            assert int(self.phase_id.max(initial=0)) < len(self.phase_names)
             self.phase_id = self.phase_id.astype(np.int32)
 
     @property

@@ -24,7 +24,9 @@ from typing import Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
-SCHEMA_VERSION = 1
+# 2: resilience fields (ladder_rung / retries / degradations); loading a
+# schema-1 ledger leaves them None.
+SCHEMA_VERSION = 2
 
 
 def counter_digest(counters) -> str:
@@ -82,6 +84,13 @@ class RunRecord:
     um_lanes_requested: Optional[int] = None
     um_lanes_run: Optional[int] = None
     um_lanes_deduped: Optional[int] = None
+    # resilience (see repro.resilience.guard): which degradation-ladder
+    # rung produced the counters, same-rung retries spent, and the
+    # structured degradation events walked to get there (None = the
+    # planned shape succeeded first try with nothing to report)
+    ladder_rung: Optional[str] = None
+    retries: Optional[int] = None
+    degradations: Optional[List[Dict[str, object]]] = None
     # run identity
     git_sha: Optional[str] = None
     git_dirty: Optional[bool] = None

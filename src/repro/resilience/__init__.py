@@ -1,0 +1,74 @@
+"""Engine resilience layer: validated inputs, a guarded-execution
+degradation ladder, deterministic fault injection, and resumable sweep
+checkpoints.
+
+The four pieces, in the order a request meets them:
+
+``validate``
+    Structured :class:`ValidationError` (field path + fix hint) for
+    :class:`~repro.core.timing.HMSConfig`, :class:`~repro.core.traces.Trace`
+    and :class:`~repro.workloads.ir.Scenario` inputs, checked at every
+    engine entry *before* any compile — and, unlike the bare ``assert``\\ s
+    they replace, surviving ``python -O``.
+
+``guard``
+    :func:`~repro.resilience.guard.run_ladder` wraps every engine
+    invocation, classifies failures (XLA ``RESOURCE_EXHAUSTED``, compile
+    deadline, :class:`~repro.core.tsplit.StitchError`, non-finite post-scan
+    counters) and walks a deterministic degradation ladder — bisect the
+    config batch on OOM, step (S, T) -> (S, 1) -> (1, 1), last-resort to
+    the frozen reference engine — with bounded retries + backoff.  Every
+    step lands as a structured degradation event on the obs ledger
+    (``RunRecord.degradations`` / ``retries`` / ``ladder_rung``).
+
+``faults``
+    Deterministic fault injection: ``REPRO_FAULTS="oom@3,stitch@7"`` (or
+    the :func:`~repro.resilience.faults.inject` context manager) raises
+    each failure class at the Nth guarded engine call, so the whole ladder
+    is exercisable in CI.  Counters stay bit-exact under every injected
+    fault — each rung reproduces the sequential scan exactly.
+
+``sweepckpt``
+    Resumable sweeps: completed per-config engine results are journaled
+    to ``REPRO_SWEEP_CKPT`` (JSONL, flushed per line) keyed by
+    (trace fingerprint, config digest), so a killed or faulted
+    ``simulate_many`` sweep resumes exactly where it stopped —
+    ``python -m benchmarks.run --resume``.
+
+No module here imports ``repro.core`` at module level (all engine-side
+imports are lazy), so the package is safe to import from either side of
+the engine <-> resilience seam in any order.
+"""
+
+from __future__ import annotations
+
+from . import faults, guard, sweepckpt, validate
+from .faults import InjectedFault, inject
+from .guard import (
+    CounterInvalidError,
+    LadderOutcome,
+    ResilienceError,
+    check_finite,
+    classify_failure,
+    guarded_call,
+    run_ladder,
+)
+from .sweepckpt import SweepCheckpoint, config_digest, trace_fingerprint
+from .validate import (
+    EngineInvariantError,
+    ResilienceWarning,
+    ValidationError,
+    validate_config,
+    validate_scenario,
+    validate_trace,
+)
+
+__all__ = [
+    "faults", "guard", "sweepckpt", "validate",
+    "InjectedFault", "inject",
+    "CounterInvalidError", "LadderOutcome", "ResilienceError",
+    "check_finite", "classify_failure", "guarded_call", "run_ladder",
+    "SweepCheckpoint", "config_digest", "trace_fingerprint",
+    "EngineInvariantError", "ResilienceWarning", "ValidationError",
+    "validate_config", "validate_scenario", "validate_trace",
+]

@@ -78,6 +78,9 @@ from repro import obs
 from repro.core import costmodel, tsplit
 from repro.core.timing import COLUMN_BYTES, UM_PAGE_BYTES, HMSConfig
 from repro.core.traces import Trace
+from repro.resilience import guard as _guard
+from repro.resilience import sweepckpt as _sweepckpt
+from repro.resilience import validate as _rvalidate
 
 
 def _bucket(n: int) -> int:
@@ -552,18 +555,51 @@ def _run_um_split(key: _UMKey, fn, xs, p, page, n_pages: int, width: int):
 # Entry points.
 # ---------------------------------------------------------------------------
 
+_COUNTER_FIELDS = (("um_faults", "phase_faults"),
+                   ("um_migrated", "phase_migrated"),
+                   ("um_writebacks", "phase_writebacks"),
+                   ("um_remote_cols", "phase_remote_cols"))
+
+
+def _um_reference_attempt(trace: Trace, run_specs: Sequence[UMSpec],
+                          key: _UMKey):
+    """Last ladder rung: the frozen sequential reference, one spec at a
+    time.  It emits whole-trace totals only — offered for unphased traces
+    — and pins the nvlink hotness threshold at 4, so the guard gates it
+    to specs the reference reproduces exactly."""
+    from . import _reference
+    rows = []
+    for s in run_specs:
+        cfg = HMSConfig(footprint=int(s.n_frames) * UM_PAGE_BYTES,
+                        r_hbm=1.0, organization="hbm",
+                        um_prefetch_pages=max(1, int(s.chunk)))
+        rows.append(_reference.run_um_reference(trace, cfg,
+                                                nvlink=s.nvlink))
+    Cs = {k: np.asarray([[float(r[j])] for r in rows], np.float64)
+          for j, (k, _) in enumerate(_COUNTER_FIELDS)}
+    return Cs, 1, dataclasses.replace(key, t_segments=1, replay=0), False
+
+
 def simulate_um_many(trace: Trace, specs: Sequence[UMSpec]) -> List[UMResult]:
     """Run a batch of UM configs over one trace: one compiled, vmapped scan
     for every spec not already memoized, with duplicate specs deduped to a
     single lane.  Specs whose frames cover the whole footprint early-out to
-    zero counters without touching the device.  Results come back in input
-    order and match the frozen sequential reference exactly."""
+    zero counters without touching the device.  The scan runs under the
+    degradation ladder (T>1 -> T=1 -> frozen reference where exact; OOM on
+    a wide batch bisects it), and an active sweep checkpoint replays
+    journaled specs from disk.  Results come back in input order and match
+    the frozen sequential reference exactly."""
     global _LANES_RUN
     t_start = time.perf_counter()
     specs = list(specs)
+    for s in specs:
+        _rvalidate.validate_um_spec(s)
     cache = _RESULT_CACHE.setdefault(trace, {})
     page, n_pages = _page_stream(trace)
     n_ph = trace.n_phases
+
+    ck = _sweepckpt.active()
+    tfp = _sweepckpt.trace_fingerprint(trace) if ck is not None else None
 
     run_specs: List[UMSpec] = []
     for s in specs:
@@ -572,12 +608,18 @@ def simulate_um_many(trace: Trace, specs: Sequence[UMSpec]) -> List[UMResult]:
         if s.n_frames >= n_pages:
             z = np.zeros((n_ph,), np.float64)
             cache[s] = UMResult(s, z, z.copy(), z.copy(), z.copy())
+            continue
+        hit = ck.get_um(tfp, s) if ck is not None else None
+        if hit is not None:
+            cache[s] = UMResult(s, hit["um_faults"], hit["um_migrated"],
+                                hit["um_writebacks"], hit["um_remote_cols"])
         else:
             run_specs.append(s)
 
     key = None
     compiled = False
     t_rounds = None
+    outcome = None
     if run_specs:
         t_seg = costmodel.choose_um_split(trace.n, len(run_specs))
         replay = tsplit.replay_prefix() if t_seg > 1 else 0
@@ -594,34 +636,57 @@ def simulate_um_many(trace: Trace, specs: Sequence[UMSpec]) -> List[UMResult]:
             "hot_thresh": np.asarray([s.hot_thresh for s in run_specs],
                                      np.int32),
         }
-        with obs.span("um_scan", engine="um", lanes=len(run_specs),
-                      trace=trace.name):
-            if key.t_segments > 1:
-                fn = _engine_for(key)
-                before = _UM_TRACE_COUNTS.get(key, 0)
-                try:
-                    with obs.span("stitch", engine="um",
-                                  segments=key.t_segments,
-                                  replay=key.replay):
-                        Cs, t_rounds = _run_um_split(
-                            key, fn,
-                            _um_split_inputs(trace, key, page, phase),
-                            p, page, n_pages, len(run_specs))
-                    compiled = _UM_TRACE_COUNTS.get(key, 0) > before
-                except tsplit.StitchError:
-                    # round-bound guard tripped: never ship speculative
-                    # counters — fall back to the exact unsplit scan
-                    key = dataclasses.replace(key, t_segments=1, replay=0)
-            if key.t_segments == 1:
-                fn = _engine_for(key)
-                before = _UM_TRACE_COUNTS.get(key, 0)
-                Cs = fn({"page": page,
-                         "is_write": trace.is_write.astype(bool),
-                         "phase": phase}, p)
-                Cs = {k: np.asarray(v, np.float64) for k, v in Cs.items()}
-                compiled = _UM_TRACE_COUNTS.get(key, 0) > before
-                t_rounds = 1
-        obs.engine_run(_fingerprint(key, len(run_specs)), compiled)
+
+        def attempt(k: _UMKey):
+            def thunk():
+                fn = _engine_for(k)
+                before = _UM_TRACE_COUNTS.get(k, 0)
+                rounds = 1
+                with obs.span("um_scan", engine="um",
+                              lanes=len(run_specs), trace=trace.name):
+                    if k.t_segments > 1:
+                        with obs.span("stitch", engine="um",
+                                      segments=k.t_segments,
+                                      replay=k.replay):
+                            Cs, rounds = _run_um_split(
+                                k, fn,
+                                _um_split_inputs(trace, k, page, phase),
+                                p, page, n_pages, len(run_specs))
+                    else:
+                        Cs = fn({"page": page,
+                                 "is_write": trace.is_write.astype(bool),
+                                 "phase": phase}, p)
+                        Cs = {kk: np.asarray(v, np.float64)
+                              for kk, v in Cs.items()}
+                return Cs, rounds, k, _UM_TRACE_COUNTS.get(k, 0) > before
+            return thunk
+
+        def bisect():
+            # OOM relief: the halves run as their own guarded batches
+            # (emitting their own ledger records) and land in the result
+            # cache; restack the lanes from there.
+            h = len(run_specs) // 2
+            simulate_um_many(trace, run_specs[:h])
+            simulate_um_many(trace, run_specs[h:])
+            Cs = {k: np.stack([np.asarray(getattr(cache[s], f), np.float64)
+                               for s in run_specs])
+                  for k, f in _COUNTER_FIELDS}
+            return Cs, 1, key, False
+
+        rungs = [(f"T{key.t_segments}", attempt(key))]
+        if key.t_segments > 1:
+            rungs.append(
+                ("T1", attempt(dataclasses.replace(
+                    key, t_segments=1, replay=0))))
+        if n_ph == 1 and all((not s.nvlink) or s.hot_thresh == 4
+                             for s in run_specs):
+            rungs.append(
+                ("reference",
+                 lambda: _um_reference_attempt(trace, run_specs, key)))
+        (Cs, t_rounds, key, compiled), outcome = _guard.run_ladder(
+            "um", rungs, bisect=bisect if len(run_specs) > 1 else None)
+        if outcome.rung not in ("reference", "bisect"):
+            obs.engine_run(_fingerprint(key, len(run_specs)), compiled)
         _LANES_RUN += len(run_specs)
         for j, s in enumerate(run_specs):
             cache[s] = UMResult(
@@ -631,6 +696,9 @@ def simulate_um_many(trace: Trace, specs: Sequence[UMSpec]) -> List[UMResult]:
                 Cs["um_writebacks"][j],
                 Cs["um_remote_cols"][j],
             )
+        if ck is not None:
+            for s in run_specs:
+                ck.put_um(tfp, s, cache[s])
 
     out = [cache[s] for s in specs]
     if obs.enabled():
@@ -653,6 +721,10 @@ def simulate_um_many(trace: Trace, specs: Sequence[UMSpec]) -> List[UMResult]:
             um_lanes_requested=len(specs),
             um_lanes_run=len(run_specs),
             um_lanes_deduped=len(specs) - len(run_specs),
+            ladder_rung=outcome.rung if outcome is not None else None,
+            retries=outcome.retries if outcome is not None else None,
+            degradations=(outcome.events or None)
+            if outcome is not None else None,
             host=obs.host_metadata(), **obs.git_info()))
     return out
 

@@ -145,16 +145,9 @@ class Scenario:
     description: str = ""
 
     def __post_init__(self):
-        assert abs(sum(self.regions.values())) <= 1.0 + 1e-9, (
-            f"{self.name}: region fractions exceed the footprint")
-        names = [p.name for p in self.phases]
-        assert len(set(names)) == len(names), (
-            f"{self.name}: phase names must be unique")
-        for p in self.phases:
-            assert p.region in self.regions, (
-                f"{self.name}/{p.name}: unknown region {p.region!r}")
-            assert p.pattern in PATTERNS, (
-                f"{self.name}/{p.name}: unknown pattern {p.pattern!r}")
+        # structured validation (field path + fix hint, survives python -O)
+        from repro.resilience.validate import validate_scenario
+        validate_scenario(self, patterns=PATTERNS)
 
     @property
     def phase_names(self) -> Tuple[str, ...]:
@@ -165,6 +158,11 @@ class Scenario:
         """Generate the request stream: exactly ``n`` requests, regions laid
         out contiguously within ``footprint * oversub`` bytes, per-request
         ``phase_id`` tagging."""
+        from repro.resilience.validate import ValidationError
+        if n < 1:
+            raise ValidationError(
+                f"Scenario({self.name}).compile(n)", n,
+                "at least one request")
         fp = int((self.footprint if footprint is None else footprint)
                  * oversub)
         total = fp // COLUMN_BYTES
@@ -174,7 +172,11 @@ class Scenario:
         for rname, frac in self.regions.items():
             size = max(16, int(total * frac))
             size = min(size, total - cursor)
-            assert size > 0, f"{self.name}: footprint too small for regions"
+            if size <= 0:
+                raise ValidationError(
+                    f"Scenario({self.name}).footprint", fp,
+                    f"enough bytes to lay out region {rname!r}",
+                    "grow the footprint/oversub or shrink earlier regions")
             spans[rname] = (cursor, size)
             cursor += size
 
