@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 from typing import Iterator, List, Optional, Tuple
 
@@ -35,6 +36,18 @@ INFO_MARKERS = ("shard", "speedup", "ts", "stitch", "segment", "replay",
                 "degradation", "ladder", "resume", "ckpt", "partial")
 INFO_SUFFIXES = ("depth", "retries")
 
+_TOKEN_SPLIT = re.compile(r"[^a-z0-9]+")
+
+
+def _marker_match(leaf: str) -> bool:
+    """True when an INFO_MARKER matches a word-boundary token of the leaf
+    (singular or plural).  Substring matching here was a hole in the gate:
+    the 'ts' marker matched inside 'hits', 'counts', 'points', 'um_faults'
+    — model counters silently excluded from the bit-for-bit check."""
+    tokens = _TOKEN_SPLIT.split(leaf.lower())
+    return any(tok == m or tok == m + "s"
+               for tok in tokens for m in INFO_MARKERS)
+
 
 def _classify(path: Tuple[str, ...]) -> str:
     """'info' | 'timing' | 'model' for one leaf path."""
@@ -43,7 +56,7 @@ def _classify(path: Tuple[str, ...]) -> str:
     leaf = path[-1] if path else ""
     if any(leaf.endswith(s) for s in TIMING_SUFFIXES):
         return "timing"
-    if any(m in leaf for m in INFO_MARKERS) or \
+    if _marker_match(leaf) or \
             any(leaf.endswith(s) for s in INFO_SUFFIXES):
         return "info"
     return "model"
@@ -96,6 +109,35 @@ def diff_artifacts(old: dict, new: dict,
     return model, timing, info
 
 
+def frontier_gate(old_path: str, new_path: str) -> List[str]:
+    """Frontier-aware gate: ingest both artifacts into the design-space
+    store and diff their Pareto frontiers.  Returns regression lines
+    (empty when the frontiers are identical — which bit-identical model
+    counters guarantee).  Artifacts whose rows lack a frontier axis (e.g.
+    the UM suite, which has no runtime/traffic axes) contribute no
+    candidates and trivially pass."""
+    from repro.obs.store import SilverStore, frontier_diff
+
+    lines: List[str] = []
+    stores = []
+    for path in (old_path, new_path):
+        s = SilverStore()
+        s.ingest_bench(path)
+        stores.append(s)
+    diff = frontier_diff(stores[0].rows(), stores[1].rows())
+    for r in diff.regressions:
+        g = r["group"]
+        if r["axis"] == "frontier":
+            lines.append(
+                f"{g[0]}/{g[1]}: config {r['config_key']} left the "
+                f"frontier (dominated by {r.get('dominated_by')})")
+        else:
+            lines.append(
+                f"{g[0]}/{g[1]}: config {r['config_key']} {r['axis']} "
+                f"{r['old']:g} -> {r['new']:g} (+{r['delta']:g})")
+    return lines
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="benchmarks.compare",
@@ -109,6 +151,10 @@ def main(argv=None) -> int:
                     metavar="PCT",
                     help="fail (exit 2) if a timing key regresses by more "
                          "than PCT percent (default: timings informational)")
+    ap.add_argument("--frontier", action="store_true",
+                    help="also diff Pareto frontiers via the design-space "
+                         "store; a config regressing on or leaving a "
+                         "frontier exits 1 (model class)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress informational differences")
     try:
@@ -125,6 +171,9 @@ def main(argv=None) -> int:
         return 3
 
     model, timing, info = diff_artifacts(old, new, args.max_wall_regress)
+    if args.frontier:
+        model.extend(f"frontier: {line}"
+                     for line in frontier_gate(args.old, args.new))
     if info and not args.quiet:
         for line in info:
             print(f"  info   {line}")

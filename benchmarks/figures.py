@@ -277,6 +277,7 @@ def sweep_design_space(results: Dict) -> List[tuple]:
     from repro.core import tsplit as tsplit_mod
     from repro.core.simulator import (_engine_key, group_engine_key,
                                       set_max_shards)
+    from repro.resilience import sweepckpt as _sweepckpt
 
     from .common import (bench_n, host_metadata, register_partial, trace,
                          unregister_partial)
@@ -343,6 +344,15 @@ def sweep_design_space(results: Dict) -> List[tuple]:
             # across shard counts and hosts) + the per-point model outputs —
             # what benchmarks.compare gates on
             "counter_digest": obs.counter_digest([r.counters for r in rs]),
+            # design-space-store identity + full per-point model counters:
+            # what repro.obs.store joins this artifact with ledger /
+            # checkpoint rows on, and what the gold frontiers derive their
+            # traffic axes from
+            "trace_fp": _sweepckpt.trace_fingerprint(t),
+            "point_config_digests": [_sweepckpt.config_digest(c)
+                                     for c in cfgs],
+            "point_counters": [_sweepckpt.encode_counters(r.counters)
+                               for r in rs],
             "point_runtime_cycles": [r.runtime_cycles for r in rs],
             "wall_s": wall_s,
             "compile_s": max(0.0, cold_s - wall_s),
@@ -422,7 +432,7 @@ def sweep_design_space(results: Dict) -> List[tuple]:
     os.makedirs(art, exist_ok=True)
     figs = _tsplit_figure(tsec, art)
     with open(os.path.join(art, "BENCH_sweep.json"), "w") as f:
-        json.dump({"n": bench_n(), "grid_points": len(grid),
+        json.dump({"n": bench_n(), "grid_points": len(grid), "grid": grid,
                    "host": host_metadata(), "workloads": detail,
                    "tsplit": tsec, "figures": figs}, f, indent=1)
     return rows

@@ -1,0 +1,158 @@
+"""Design-space report CLI: bronze sources -> silver store -> gold views.
+
+Ingests every bronze evidence source it is pointed at — ``BENCH_*.json``
+benchmark artifacts, obs run-ledger JSONL, resumable-sweep checkpoint
+journals — into the silver store (``REPRO_STORE_DIR`` or ``--store``),
+then renders the gold views: per-workload Pareto frontiers on (runtime,
+DRAM+SCM traffic, probe traffic), the best-config table, and — when the
+store spans more than one commit — the cross-PR frontier diff.
+
+With no sources given, everything under ``benchmarks/artifacts`` and
+``benchmarks/baselines`` is ingested, so a fresh sweep plus the committed
+baselines are already two independent runs (two git SHAs, possibly two
+hosts) joined in one store.  Re-running ingest is a no-op: the per-source
+stats printed per line show ``+0 added`` on a warm store.
+
+    PYTHONPATH=src python -m benchmarks.report [SOURCE ...]
+        [--store DIR] [--out DIR] [--diff OLD_SHA NEW_SHA]
+        [--fail-on-regression] [--no-figures]
+
+Exit codes: 0 ok; 1 frontier regression (with --fail-on-regression);
+3 usage / no ingestible source.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import sys
+from typing import List, Optional
+
+
+def _expand(sources: List[str]) -> List[str]:
+    """Files pass through; directories contribute their BENCH_*.json,
+    ledger.jsonl and sweep_ckpt.jsonl members."""
+    out = []
+    for src in sources:
+        if os.path.isdir(src):
+            out += sorted(glob.glob(os.path.join(src, "BENCH_*.json")))
+            for name in ("ledger.jsonl", "sweep_ckpt.jsonl"):
+                p = os.path.join(src, name)
+                if os.path.exists(p):
+                    out.append(p)
+        elif os.path.exists(src):
+            out.append(src)
+        else:
+            print(f"report: no such source: {src}", file=sys.stderr)
+    return out
+
+
+def _match_sha(rows, prefix: str):
+    shas = sorted({r.git_sha for r in rows
+                   if r.git_sha.startswith(prefix)})
+    if len(shas) != 1:
+        raise SystemExit(
+            f"report: --diff sha {prefix!r} matches {len(shas)} commits "
+            f"in the store ({shas}); give a longer prefix")
+    return [r for r in rows if r.git_sha == shas[0]]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.report",
+        description="Ingest bronze benchmark evidence into the silver "
+                    "design-space store and render the gold Pareto "
+                    "report.")
+    ap.add_argument("sources", nargs="*",
+                    help="artifacts / ledgers / checkpoint journals to "
+                         "ingest (default: benchmarks/artifacts and "
+                         "benchmarks/baselines)")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="silver store directory (default: "
+                         "REPRO_STORE_DIR or benchmarks/store); "
+                         "'memory' keeps the store in-process")
+    ap.add_argument("--out", default=None, metavar="DIR",
+                    help="report output directory (default: "
+                         "benchmarks/artifacts/report)")
+    ap.add_argument("--diff", nargs=2, metavar=("OLD_SHA", "NEW_SHA"),
+                    default=None,
+                    help="diff frontiers between two commits in the "
+                         "store (sha prefixes); default: auto-diff when "
+                         "the store holds exactly two commits")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 when the cross-PR diff contains "
+                         "frontier regressions")
+    ap.add_argument("--no-figures", action="store_true",
+                    help="skip PNG rendering (markdown only)")
+    try:
+        args = ap.parse_args(argv)
+    except SystemExit:
+        return 3
+
+    from repro.obs.store import (SilverStore, default_store_dir,
+                                 frontier_diff, render_figures,
+                                 render_markdown)
+
+    # baselines before artifacts: first-ingested rows carry the earlier
+    # store timestamps, which is what the auto-diff below orders OLD ->
+    # NEW by when the two commits were ingested in the same process
+    here = os.path.dirname(os.path.abspath(__file__))
+    sources = args.sources or [os.path.join(here, "baselines"),
+                               os.path.join(here, "artifacts")]
+    paths = _expand(sources)
+    store_dir = args.store or default_store_dir()
+    store = SilverStore(None if store_dir == "memory" else store_dir)
+    for p in paths:
+        print(f"  ingest {store.ingest(p)}")
+    if not len(store):
+        print("report: store is empty — nothing ingestible found "
+              f"in {sources}", file=sys.stderr)
+        return 3
+
+    rows = store.rows()
+    diff = None
+    shas = sorted({r.git_sha for r in rows})
+    if args.diff:
+        diff = frontier_diff(_match_sha(rows, args.diff[0]),
+                             _match_sha(rows, args.diff[1]))
+    elif len(shas) == 2:
+        # the committed-baseline sha vs the fresh run's sha: with no
+        # ordering hint, treat the sha owning the older rows as OLD
+        by = {s: min(r.ts for r in rows if r.git_sha == s) for s in shas}
+        old, new = sorted(shas, key=lambda s: by[s])
+        diff = frontier_diff([r for r in rows if r.git_sha == old],
+                             [r for r in rows if r.git_sha == new])
+
+    out_dir = args.out or os.path.join(here, "artifacts", "report")
+    os.makedirs(out_dir, exist_ok=True)
+    md = render_markdown(store, diff=diff)
+    md_path = os.path.join(out_dir, "report.md")
+    with open(md_path, "w") as f:
+        f.write(md + "\n")
+    figs: List[str] = []
+    if not args.no_figures:
+        figs = render_figures(rows, os.path.join(out_dir, "figs"))
+    store.close()
+
+    s = store.summary()
+    print(f"report: {s['rows']} rows | workloads={len(s['workloads'])} "
+          f"commits={len(s['git_shas'])} hosts={len(s['hosts'])}")
+    print(f"report: wrote {md_path}" +
+          (f" + {len(figs)} figure(s)" if figs else ""))
+    if diff is not None:
+        n_reg = len(diff.regressions)
+        print(f"report: frontier diff {diff.sha_old[:12]} -> "
+              f"{diff.sha_new[:12]}: "
+              + ("identical" if diff.empty
+                 else f"{diff.summary()} "))
+        if n_reg and args.fail_on_regression:
+            for r in diff.regressions:
+                print(f"  REGRESSION {r}")
+            print(f"report: FAIL — {n_reg} frontier regression(s)")
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

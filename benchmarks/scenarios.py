@@ -113,6 +113,7 @@ def _figures(detail: Dict, art: str) -> List[str]:
 def run(results: Dict) -> List[tuple]:
     from repro import obs
     from repro.core import HMSConfig, simulate_many
+    from repro.resilience import sweepckpt as _sweepckpt
     from repro.workloads import SCENARIOS
 
     n = bench_n()
@@ -139,14 +140,22 @@ def run(results: Dict) -> List[tuple]:
         t0 = time.time()
         for ov in OVERSUB_GRID:
             t = base if ov == 1.0 else scn.compile(n=n, oversub=ov)
+            hms_cfg = HMSConfig(footprint=cfg_fp)
             with obs.span("scenario_point", scenario=name, oversub=ov):
                 hms, inf = simulate_many(t, [
-                    HMSConfig(footprint=cfg_fp),
+                    hms_cfg,
                     HMSConfig(footprint=cfg_fp, organization="inf_hbm"),
                 ])
             sweep.append({
                 "oversub": ov,
                 "footprint_bytes": t.footprint,
+                # design-space-store identity + full HMS-lane counters
+                # (the silver store joins this point with ledger rows on
+                # the (trace_fp, config_digest) pair)
+                "trace_fp": _sweepckpt.trace_fingerprint(t),
+                "config_digest": _sweepckpt.config_digest(hms_cfg),
+                "counters": _sweepckpt.encode_counters(hms.counters),
+                "runtime_cycles": hms.runtime_cycles,
                 "runtime_rel_inf": hms.runtime_cycles / inf.runtime_cycles,
                 "hit_rate_read": hms.hit_rate_read,
                 "hit_rate_write": hms.hit_rate_write,

@@ -45,6 +45,7 @@ UM_WORKLOADS = ("moe_expert", "bfs_tu")
 def run(results: Dict) -> List[tuple]:
     from repro import obs, um
     from repro.core import HMSConfig
+    from repro.resilience import sweepckpt as _sweepckpt
     from repro.um._reference import run_um_reference
 
     n = bench_n()
@@ -101,15 +102,25 @@ def run(results: Dict) -> List[tuple]:
         points = [{
             "rel_footprint": rel,
             "nvlink": nv,
+            # design-space-store identity + full per-phase UM counters
+            # (same encoding the obs ledger and sweep checkpoint carry)
+            "spec_key": _sweepckpt.um_spec_key(spec),
+            "counters": _sweepckpt.encode_counters({
+                "um_faults": r.phase_faults,
+                "um_migrated": r.phase_migrated,
+                "um_writebacks": r.phase_writebacks,
+                "um_remote_cols": r.phase_remote_cols,
+            }),
             "faults": r.faults,
             "migrated_pages": r.migrated,
             "writeback_pages": r.writebacks,
             "remote_cols": r.remote_cols,
             "link_bytes": r.link_bytes,
-        } for (rel, nv), r in zip(cfgs, rs)]
+        } for ((rel, nv), r, spec) in zip(cfgs, rs, specs)]
         detail[w] = {
             "n": n,
             "footprint_bytes": t.footprint,
+            "trace_fp": _sweepckpt.trace_fingerprint(t),
             "points": points,
             "grid_points": len(specs),
             "engine_entries": obs.cache_stats()["um_engines"],

@@ -777,12 +777,18 @@ def _fingerprint(key: _EngineKey, width: int) -> str:
 
 def _obs_hms_record(entry: str, trace: Trace, key: _EngineKey, width: int,
                     compiled: bool, wall_s: float, digest: str,
-                    rounds: int = 1, outcome=None) -> None:
+                    rounds: int = 1, outcome=None,
+                    cfgs: Sequence[HMSConfig] = (),
+                    lanes: Sequence[Dict[str, np.ndarray]] = ()) -> None:
     """Build + emit one HMS ledger record (caller gates on obs.enabled()).
     ``key`` is the engine key that actually produced the counters (the
     degradation ladder may have descended from the planned one);
     ``outcome`` is the guard's :class:`~repro.resilience.guard
-    .LadderOutcome`."""
+    .LadderOutcome`.  ``cfgs``/``lanes`` are the per-vmap-lane configs and
+    raw counter dicts — recorded in full (schema 3) so the silver store
+    gets model counters, not just the digest.  The config key hashes the
+    config alone (no link mode): these are raw scan counters, upstream of
+    the UM-overflow term that makes ``nvlink`` matter."""
     obs.record(obs.RunRecord(
         entry=entry, engine="hms", trace=trace.name, n=trace.n,
         phases=key.phases, engine_key=_fingerprint(key, width),
@@ -795,6 +801,9 @@ def _obs_hms_record(entry: str, trace: Trace, key: _EngineKey, width: int,
         retries=outcome.retries if outcome is not None else None,
         degradations=(outcome.events or None)
         if outcome is not None else None,
+        trace_fp=_sweepckpt.trace_fingerprint(trace),
+        config_digests=[_sweepckpt.config_digest(c) for c in cfgs] or None,
+        counters=[_sweepckpt.encode_counters(C) for C in lanes] or None,
         host=obs.host_metadata(), **obs.git_info()))
 
 
@@ -1043,7 +1052,8 @@ def _run_hms_scan(trace: Trace, cfg: HMSConfig, pre,
         obs.engine_run(_fingerprint(used, 1), compiled)
     if obs.enabled():
         _obs_hms_record(entry, trace, used, 1, compiled, wall,
-                        obs.counter_digest(C), rounds, outcome)
+                        obs.counter_digest(C), rounds, outcome,
+                        cfgs=[cfg], lanes=[C])
     return C
 
 
@@ -1109,11 +1119,12 @@ def _run_hms_batch(trace: Trace, cfgs: Sequence[HMSConfig], key: _EngineKey,
     if outcome.rung not in ("reference", "bisect"):
         obs.engine_run(_fingerprint(used, len(cfgs)), compiled)
     if obs.enabled():
+        lanes = [{k: v[j] for k, v in Cs.items()}
+                 for j in range(len(cfgs))]
         _obs_hms_record(
             entry, trace, used, len(cfgs), compiled, wall,
-            obs.counter_digest([{k: v[j] for k, v in Cs.items()}
-                                for j in range(len(cfgs))]), rounds,
-            outcome)
+            obs.counter_digest(lanes), rounds, outcome,
+            cfgs=cfgs, lanes=lanes)
     return Cs
 
 
@@ -1338,6 +1349,9 @@ def _single_tier_record(entry: str, trace: Trace, cfg: HMSConfig,
         engine_key=f"single_tier:{cfg.organization}:n{trace.n}",
         compiled=False, wall_s=wall_s, batch=1,
         counter_digest=obs.counter_digest(C),
+        trace_fp=_sweepckpt.trace_fingerprint(trace),
+        config_digests=[_sweepckpt.config_digest(cfg)],
+        counters=[_sweepckpt.encode_counters(C)],
         host=obs.host_metadata(), **obs.git_info()))
 
 

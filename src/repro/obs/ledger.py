@@ -20,13 +20,18 @@ import hashlib
 import json
 import os
 import time
+import warnings
 from typing import Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
 # 2: resilience fields (ladder_rung / retries / degradations); loading a
 # schema-1 ledger leaves them None.
-SCHEMA_VERSION = 2
+# 3: design-space-store fields (trace_fp / config_digests / counters):
+# per-lane model counters in full — not just the 16-hex digest — plus the
+# (trace fingerprint, per-lane config key) identity the silver store
+# (repro.obs.store) joins runs on.  Older ledgers load with them None.
+SCHEMA_VERSION = 3
 
 
 def counter_digest(counters) -> str:
@@ -91,6 +96,14 @@ class RunRecord:
     ladder_rung: Optional[str] = None
     retries: Optional[int] = None
     degradations: Optional[List[Dict[str, object]]] = None
+    # design-space store feed (see repro.obs.store.silver): the trace
+    # content fingerprint, one config key per vmap lane (HMS config digest
+    # / UM spec key), and the full per-lane model counters (JSON-safe:
+    # float64 scalars, or per-phase lists for phased traces).  None on
+    # schema-1/2 records and on paths that predate the store.
+    trace_fp: Optional[str] = None
+    config_digests: Optional[List[str]] = None
+    counters: Optional[List[Dict[str, object]]] = None
     # run identity
     git_sha: Optional[str] = None
     git_dirty: Optional[bool] = None
@@ -190,15 +203,37 @@ def clear_records() -> None:
 
 
 def load_ledger(path: str) -> List[RunRecord]:
-    """Read a JSONL ledger back into :class:`RunRecord` objects."""
+    """Read a JSONL ledger back into :class:`RunRecord` objects.
+
+    Torn or corrupt lines — e.g. the half-flushed tail a SIGKILL'd run
+    leaves behind — are skipped with a warning carrying the count, the
+    same tolerance ``repro.resilience.sweepckpt`` applies to its journal:
+    a crashed run's ledger is still evidence, not an exception."""
     if os.path.isdir(path):
         path = os.path.join(path, "ledger.jsonl")
     out = []
+    bad = 0
     with open(path) as f:
         for line in f:
             line = line.strip()
-            if line:
-                out.append(RunRecord.from_dict(json.loads(line)))
+            if not line:
+                continue
+            try:
+                d = json.loads(line)
+            except ValueError:
+                bad += 1
+                continue
+            if not isinstance(d, dict):
+                bad += 1
+                continue
+            try:
+                out.append(RunRecord.from_dict(d))
+            except TypeError:       # not a record shape (missing required)
+                bad += 1
+    if bad:
+        warnings.warn(
+            f"load_ledger({path!r}): skipped {bad} torn/corrupt line(s)",
+            RuntimeWarning, stacklevel=2)
     return out
 
 

@@ -1,0 +1,62 @@
+"""Design-space store: the silver/gold layers over the bronze ledger.
+
+The obs subsystem's bronze layer (PR 6-8) is raw, append-only evidence:
+per-invocation run-ledger JSONL, ``BENCH_*.json`` benchmark artifacts,
+and resumable-sweep checkpoint journals.  Nothing joins them — every
+cross-PR or cross-policy question ("did this config leave the Pareto
+frontier?", "which knob setting is best for this workload?") had to be
+answered by hand.  This package is that join:
+
+* **Silver** (:mod:`.silver`) — one normalized, deduplicated store over
+  every bronze source, keyed by ``(trace fingerprint x config key x git
+  SHA x host id)``.  Rows carry the full model counters (scalar totals
+  or per-phase vectors), merged across sources with bit-for-bit totals
+  checks; re-ingesting a source is a no-op.
+* **Gold** (:mod:`.gold`) — materialized views over silver: Pareto
+  frontiers on ``(runtime_cycles, dram+scm traffic, probe traffic)`` per
+  workload x policy, best-config-per-workload tables, and cross-PR
+  frontier diffs (which configs entered/left the frontier between two
+  git SHAs, per-axis deltas).
+* **Report** (:mod:`.report`) — renders the gold views to markdown and
+  figures; ``python -m benchmarks.report`` is the CLI.
+
+Import note: like the rest of ``repro.obs``, nothing here imports
+``repro.core`` / ``repro.um`` at module level — derived-metric constants
+are fetched lazily at call time.  The package itself is NOT imported by
+``repro.obs.__init__`` (``from repro.obs import store`` on demand), so
+the engines' ``import repro.obs`` stays as light as before.
+"""
+
+from __future__ import annotations
+
+from .gold import (
+    AXES,
+    FrontierDiff,
+    FrontierPoint,
+    best_configs,
+    frontier_diff,
+    frontier_view,
+    pareto,
+)
+from .report import render_diff_markdown, render_figures, render_markdown
+from .silver import (
+    SILVER_SCHEMA_VERSION,
+    IngestStats,
+    SilverRow,
+    SilverStore,
+    counter_totals,
+    default_store_dir,
+    derive_metrics,
+    host_id,
+)
+
+__all__ = [
+    # silver
+    "SILVER_SCHEMA_VERSION", "SilverRow", "SilverStore", "IngestStats",
+    "counter_totals", "derive_metrics", "host_id", "default_store_dir",
+    # gold
+    "AXES", "FrontierPoint", "FrontierDiff", "pareto", "frontier_view",
+    "best_configs", "frontier_diff",
+    # report
+    "render_markdown", "render_diff_markdown", "render_figures",
+]

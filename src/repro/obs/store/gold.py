@@ -1,0 +1,212 @@
+"""Gold layer: materialized design-space views over the silver store.
+
+Everything here is a pure function of :class:`~.silver.SilverRow` lists —
+no I/O, no engine imports — so the views are as reproducible as the
+counters beneath them: two stores with bit-identical rows produce
+bit-identical frontiers, tables, and diffs.
+
+* :func:`pareto` — deterministic non-dominated filtering on the three
+  bandwidth-effectiveness axes the paper optimizes: runtime cycles,
+  total DRAM+SCM bus traffic, and probe (metadata) traffic.
+* :func:`frontier_view` — frontiers per ``(workload, policy)`` group.
+* :func:`best_configs` — the single best config per workload under a
+  chosen primary axis (ties broken by the remaining axes, then key).
+* :func:`frontier_diff` — the cross-PR regression view: which configs
+  entered/left each frontier between two row sets (typically two git
+  SHAs of the same sweep), with per-axis deltas for configs present in
+  both.  A store diffed against itself is empty by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .silver import SilverRow
+
+# Pareto axes, all minimized.  Bit-derived from model counters (traffic,
+# probe) and the deterministic timing model (runtime).
+AXES: Tuple[str, ...] = ("runtime_cycles", "traffic_bytes", "probe_bytes")
+
+
+@dataclasses.dataclass
+class FrontierPoint:
+    """One frontier candidate: a silver row projected onto the axes."""
+
+    config_key: str
+    trace_fp: str
+    workload: str
+    policy: Optional[str]
+    axes: Dict[str, float]               # axis name -> value (minimized)
+    config: Optional[Dict[str, object]]  # human-readable knobs, if known
+    git_sha: str
+
+    @property
+    def ident(self) -> str:
+        """Design-point identity: config key *and* trace fingerprint —
+        scenario oversub sweeps hold the config fixed and vary the trace,
+        so config key alone would collapse distinct points."""
+        return f"{self.config_key}@{self.trace_fp}"
+
+    @classmethod
+    def from_row(cls, row: SilverRow,
+                 axes: Sequence[str] = AXES) -> Optional["FrontierPoint"]:
+        """Project a row; None if any axis is missing (ledger rows carry
+        raw counters but no runtime until a bench source fills it in)."""
+        vals = {}
+        for a in axes:
+            v = row.metrics.get(a)
+            if v is None:
+                return None
+            vals[a] = float(v)
+        return cls(config_key=row.config_key, trace_fp=row.trace_fp,
+                   workload=row.workload, policy=row.policy, axes=vals,
+                   config=row.config, git_sha=row.git_sha)
+
+    def dominates(self, other: "FrontierPoint") -> bool:
+        """<= on every axis and < on at least one (strict Pareto)."""
+        le = all(self.axes[a] <= other.axes[a] for a in self.axes)
+        lt = any(self.axes[a] < other.axes[a] for a in self.axes)
+        return le and lt
+
+
+def pareto(points: Sequence[FrontierPoint]) -> List[FrontierPoint]:
+    """Non-dominated subset, deterministically ordered by (first axis,
+    remaining axes, identity).  Duplicate design points (same config key
+    and trace) collapse to one first — re-ingestion order can never
+    change the result."""
+    byk: Dict[str, FrontierPoint] = {}
+    for p in points:
+        byk.setdefault(p.ident, p)
+    uniq = sorted(byk.values(),
+                  key=lambda p: (*p.axes.values(), p.ident))
+    front = [p for p in uniq
+             if not any(q.dominates(p) for q in uniq if q is not p)]
+    return front
+
+
+def _group(rows: Sequence[SilverRow],
+           axes: Sequence[str]) -> Dict[Tuple[str, str], List[FrontierPoint]]:
+    groups: Dict[Tuple[str, str], List[FrontierPoint]] = {}
+    for row in rows:
+        p = FrontierPoint.from_row(row, axes)
+        if p is None:
+            continue
+        groups.setdefault((row.workload, row.policy or row.engine),
+                          []).append(p)
+    return groups
+
+
+def frontier_view(rows: Sequence[SilverRow],
+                  axes: Sequence[str] = AXES,
+                  ) -> Dict[Tuple[str, str], List[FrontierPoint]]:
+    """Pareto frontier per ``(workload, policy)`` group, groups in
+    deterministic key order."""
+    groups = _group(rows, axes)
+    return {k: pareto(v) for k, v in sorted(groups.items())}
+
+
+def best_configs(rows: Sequence[SilverRow],
+                 primary: str = "runtime_cycles",
+                 axes: Sequence[str] = AXES,
+                 ) -> Dict[str, FrontierPoint]:
+    """Best config per workload: the frontier point minimizing the
+    primary axis, ties broken by the remaining axes then config key."""
+    best: Dict[str, FrontierPoint] = {}
+    for (workload, _), front in frontier_view(rows, axes).items():
+        for p in front:
+            cur = best.get(workload)
+            key = (p.axes[primary],
+                   *[p.axes[a] for a in axes if a != primary],
+                   p.ident)
+            ck = cur and (cur.axes[primary],
+                          *[cur.axes[a] for a in axes if a != primary],
+                          cur.ident)
+            if cur is None or key < ck:
+                best[workload] = p
+    return best
+
+
+@dataclasses.dataclass
+class FrontierDiff:
+    """Cross-PR regression view between two row sets (old -> new)."""
+
+    sha_old: str
+    sha_new: str
+    # group -> config keys newly on / no longer on the frontier
+    entered: Dict[Tuple[str, str], List[str]]
+    left: Dict[Tuple[str, str], List[str]]
+    # group -> config key -> axis -> (old, new, delta) for configs on
+    # either frontier whose axis values moved
+    changed: Dict[Tuple[str, str], Dict[str, Dict[str, Tuple[float, float, float]]]]
+    # flattened worsened-axis records: the gate input
+    regressions: List[Dict[str, object]]
+
+    @property
+    def empty(self) -> bool:
+        return not (any(self.entered.values()) or any(self.left.values())
+                    or any(self.changed.values()))
+
+    def summary(self) -> Dict[str, int]:
+        return {
+            "groups_entered": sum(len(v) for v in self.entered.values()),
+            "groups_left": sum(len(v) for v in self.left.values()),
+            "configs_changed": sum(len(v) for v in self.changed.values()),
+            "regressions": len(self.regressions),
+        }
+
+
+def _shas(rows: Sequence[SilverRow]) -> str:
+    shas = sorted({r.git_sha for r in rows})
+    return shas[0] if len(shas) == 1 else "+".join(shas) or "empty"
+
+
+def frontier_diff(rows_old: Sequence[SilverRow],
+                  rows_new: Sequence[SilverRow],
+                  axes: Sequence[str] = AXES) -> FrontierDiff:
+    """Diff the frontiers of two row sets — typically the same sweep at
+    two git SHAs.  Identical row sets produce an empty diff."""
+    fv_old = frontier_view(rows_old, axes)
+    fv_new = frontier_view(rows_new, axes)
+    entered: Dict[Tuple[str, str], List[str]] = {}
+    left: Dict[Tuple[str, str], List[str]] = {}
+    changed: Dict[Tuple[str, str], Dict[str, Dict[str, Tuple[float, float, float]]]] = {}
+    regressions: List[Dict[str, object]] = []
+
+    for group in sorted(set(fv_old) | set(fv_new)):
+        old = {p.ident: p for p in fv_old.get(group, [])}
+        new = {p.ident: p for p in fv_new.get(group, [])}
+        ent = sorted(set(new) - set(old))
+        lft = sorted(set(old) - set(new))
+        if ent:
+            entered[group] = ent
+        if lft:
+            left[group] = lft
+        for key in sorted(set(old) & set(new)):
+            deltas = {}
+            for a in axes:
+                vo, vn = old[key].axes[a], new[key].axes[a]
+                if vo != vn:
+                    deltas[a] = (vo, vn, vn - vo)
+                    if vn > vo:
+                        regressions.append({
+                            "group": group, "config_key": key, "axis": a,
+                            "old": vo, "new": vn, "delta": vn - vo})
+            if deltas:
+                changed.setdefault(group, {})[key] = deltas
+        # a config leaving the frontier while the group still exists on
+        # both sides means something newly dominates it — that is the
+        # frontier-level regression signal even if its own counters
+        # didn't move
+        for key in lft:
+            if group in fv_new:
+                dominators = [p.config_key for p in fv_new[group]
+                              if all(p.axes[a] <= old[key].axes[a]
+                                     for a in axes)]
+                regressions.append({
+                    "group": group, "config_key": key, "axis": "frontier",
+                    "old": 1.0, "new": 0.0, "delta": -1.0,
+                    "dominated_by": dominators})
+    return FrontierDiff(sha_old=_shas(rows_old), sha_new=_shas(rows_new),
+                        entered=entered, left=left, changed=changed,
+                        regressions=regressions)

@@ -62,9 +62,15 @@ def config_digest(cfg, nvlink: bool = False) -> str:
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 
-def _um_spec_key(spec) -> str:
+def um_spec_key(spec) -> str:
+    """Content key of a UM paging spec — the UM engine's analogue of
+    :func:`config_digest`; the obs ledger and the silver store key UM
+    lanes with it."""
     return (f"F{int(spec.n_frames)}:c{int(spec.chunk)}"
             f":nv{int(bool(spec.nvlink))}:h{int(spec.hot_thresh)}")
+
+
+_um_spec_key = um_spec_key
 
 
 def encode_counters(C: Dict[str, object]) -> Dict[str, object]:

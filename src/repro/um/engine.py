@@ -721,6 +721,14 @@ def simulate_um_many(trace: Trace, specs: Sequence[UMSpec]) -> List[UMResult]:
             um_lanes_requested=len(specs),
             um_lanes_run=len(run_specs),
             um_lanes_deduped=len(specs) - len(run_specs),
+            trace_fp=_sweepckpt.trace_fingerprint(trace),
+            config_digests=[_sweepckpt.um_spec_key(r.spec) for r in out],
+            counters=[_sweepckpt.encode_counters({
+                "um_faults": r.phase_faults,
+                "um_migrated": r.phase_migrated,
+                "um_writebacks": r.phase_writebacks,
+                "um_remote_cols": r.phase_remote_cols,
+            }) for r in out],
             ladder_rung=outcome.rung if outcome is not None else None,
             retries=outcome.retries if outcome is not None else None,
             degradations=(outcome.events or None)

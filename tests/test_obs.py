@@ -344,3 +344,152 @@ def test_compare_usage_errors(tmp_path):
     from benchmarks.compare import main
     assert main([str(tmp_path / "missing.json"),
                  str(tmp_path / "missing2.json")]) == 3
+
+
+def test_compare_classify_word_boundary_tokens():
+    """The 'ts' marker must match whole tokens, not substrings: counter
+    leaves like um_faults / hits / counts / points are model outputs and
+    must stay in the bit-for-bit gate."""
+    from benchmarks.compare import _classify
+
+    model = ("um_faults", "hits", "counts", "points", "grid_points",
+             "faults", "requests", "counter_digest", "best_runtime")
+    info = ("grid_shards", "shards", "t_segments", "stitch_rounds",
+            "tsplit_speedup", "replay_prefix", "partial", "ts",
+            "ckpt_entries", "degradations", "single_shard_speedup")
+    for leaf in model:
+        assert _classify(("workloads", "w", leaf)) == "model", leaf
+    for leaf in info:
+        assert _classify(("workloads", "w", leaf)) == "info", leaf
+    assert _classify(("workloads", "w", "wall_s")) == "timing"
+    assert _classify(("host", "platform")) == "info"
+
+
+def test_compare_um_faults_drift_exits_1(tmp_path):
+    """Regression for the substring bug: an um_faults counter drifting
+    between two artifacts is model drift (exit 1), not informational."""
+    from benchmarks.compare import main
+
+    art = {
+        "n": 1000,
+        "host": {"platform": "linux", "git_sha": "a" * 40},
+        "workloads": {"bfs_tu": {
+            "n": 1000, "trace_fp": "f" * 16,
+            "points": [{
+                "rel_footprint": 2.0, "nvlink": False,
+                "spec_key": "F8:c16:nv0:h4",
+                "counters": {"um_faults": [3.0, 1.0],
+                             "um_migrated": [2.0, 0.0],
+                             "um_writebacks": [1.0, 0.0],
+                             "um_remote_cols": [0.0, 0.0]},
+                "faults": 4.0,
+            }],
+        }},
+    }
+    old_p = _dump(tmp_path, "old.json", art)
+    assert main([old_p, old_p]) == 0
+    drift = json.loads(json.dumps(art))
+    drift["workloads"]["bfs_tu"]["points"][0]["counters"]["um_faults"][0] \
+        = 99.0
+    assert main([old_p, _dump(tmp_path, "new.json", drift)]) == 1
+
+
+def test_compare_frontier_flag_self_and_regression(tmp_path):
+    from benchmarks.compare import main
+
+    art = {
+        "host": {"platform": "linux", "git_sha": "a" * 40},
+        "workloads": {"bfs_tu": {
+            "n": 1000, "points": 2, "trace_fp": "f" * 16,
+            "point_config_digests": ["d0" * 8, "d1" * 8],
+            "point_counters": [
+                {"demand_dram_rd": 10.0, "demand_dram_wr": 1.0,
+                 "demand_scm_rd": 2.0, "demand_scm_wr": 0.0,
+                 "probe_cols": 1.0},
+                {"demand_dram_rd": 20.0, "demand_dram_wr": 1.0,
+                 "demand_scm_rd": 2.0, "demand_scm_wr": 0.0,
+                 "probe_cols": 1.0},
+            ],
+            "point_runtime_cycles": [100.0, 50.0],
+        }},
+    }
+    old_p = _dump(tmp_path, "old.json", art)
+    assert main([old_p, old_p, "--frontier", "--quiet"]) == 0
+    # d1 (fast, heavy traffic) regresses on runtime: frontier moves
+    new = json.loads(json.dumps(art))
+    new["workloads"]["bfs_tu"]["point_runtime_cycles"][1] = 500.0
+    assert main([old_p, _dump(tmp_path, "new.json", new),
+                 "--frontier", "--quiet"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Ledger robustness + design-space-store fields (schema 3).
+# ---------------------------------------------------------------------------
+
+def test_load_ledger_skips_torn_lines(ledger):
+    t = _trace()
+    simulate(t, HMSConfig(footprint=t.footprint))
+    n_good = len(obs.records())
+    path = ledger / "ledger.jsonl"
+    with open(path, "a") as f:
+        f.write('{"schema": 3, "engine": "hms", "tr')   # torn tail
+    with pytest.warns(RuntimeWarning, match="torn/corrupt"):
+        loaded = obs.load_ledger(str(ledger))
+    assert len(loaded) == n_good
+    # valid JSON that isn't a record dict is skipped too, not crashed on
+    # (the unterminated torn tail swallows the first appended line)
+    with open(path, "a") as f:
+        f.write('"not a record"\n{"schema": 3}\n')
+    with pytest.warns(RuntimeWarning, match="2 torn/corrupt"):
+        assert len(obs.load_ledger(str(ledger))) == n_good
+
+
+def test_ledger_carries_full_counters(ledger):
+    """Schema 3: every HMS/UM record carries the silver-store identity
+    (trace fingerprint, per-lane config keys) and the full per-lane
+    counters — decode-exact against the engine's own outputs."""
+    from repro.resilience import sweepckpt
+
+    t = _trace()
+    cfg = HMSConfig(footprint=t.footprint)
+    cfgs = [cfg, dataclasses.replace(cfg, scm_mode="slc")]
+    rs = simulate_many(t, cfgs)
+    specs = [um.um_spec(HMSConfig(footprint=t.footprint,
+                                  organization="hbm", r_hbm=0.5),
+                        nvlink=nv) for nv in (False, True)]
+    um.simulate_um_many(t, specs)
+
+    recs = obs.load_ledger(str(ledger))
+    hms = [r for r in recs if r.engine == "hms"][-1]
+    assert hms.trace_fp == sweepckpt.trace_fingerprint(t)
+    assert hms.config_digests == [sweepckpt.config_digest(c) for c in cfgs]
+    assert len(hms.counters) == len(cfgs)
+    for lane, r in zip(hms.counters, rs):
+        dec = sweepckpt.decode_counters(lane)
+        for k, v in r.counters.items():
+            np.testing.assert_array_equal(dec[k], np.asarray(v, np.float64))
+
+    umr = [r for r in recs if r.engine == "um"][-1]
+    assert umr.trace_fp == sweepckpt.trace_fingerprint(t)
+    assert umr.config_digests == [sweepckpt.um_spec_key(s) for s in specs]
+    assert {k for lane in umr.counters for k in lane} \
+        == {"um_faults", "um_migrated", "um_writebacks", "um_remote_cols"}
+
+
+def test_old_schema_ledger_loads_with_none_fields(tmp_path):
+    """A schema-2 line (no trace_fp / config_digests / counters) still
+    loads; the new fields come back None."""
+    rec = obs.RunRecord(engine="hms", entry="simulate", trace="t", n=10,
+                        phases=1, engine_key="hms:x", batch=1, shards=1,
+                        depth=10, t_segments=1, stitch_rounds=1,
+                        load_imbalance=1.0, compiled=True, wall_s=0.1,
+                        counter_digest="0" * 16)
+    d = rec.to_dict()
+    for k in ("trace_fp", "config_digests", "counters"):
+        d.pop(k)
+    d["schema"] = 2
+    p = tmp_path / "ledger.jsonl"
+    p.write_text(json.dumps(d) + "\n")
+    (r,) = obs.load_ledger(str(tmp_path))
+    assert r.trace_fp is None and r.config_digests is None \
+        and r.counters is None

@@ -1,0 +1,501 @@
+"""Design-space store: silver normalization/dedup, gold Pareto
+invariants, cross-PR frontier diffs, and the report/CLI surface.
+
+The property layer (hypothesis when present, a fixed seed battery
+otherwise) checks the gold invariants the regression gate relies on:
+
+  * frontier points are mutually non-dominated, and every excluded
+    candidate is dominated by some frontier point,
+  * frontiers are invariant under row order and re-ingestion (dedup),
+  * a store diffed against itself is empty — the bit-identical-counters
+    guarantee translated to the frontier level.
+
+The unit layer pins the silver merge semantics (per-phase vectors win
+over scalar totals, totals must agree bit-for-bit, conflicts warn and
+keep the first row), JSONL persistence with torn-tail tolerance, the
+three bench-artifact ingest shapes, and the end-to-end CLI exit codes.
+"""
+
+import json
+import os
+import random
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.obs.store import (AXES, FrontierPoint, SilverRow, SilverStore,
+                             best_configs, counter_totals, derive_metrics,
+                             frontier_diff, frontier_view, host_id, pareto,
+                             render_markdown)
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # container ships without hypothesis
+    HAVE_HYPOTHESIS = False
+
+SEEDS = list(range(8))
+
+
+# ---------------------------------------------------------------------------
+# Generators: random-but-reproducible silver populations.
+# ---------------------------------------------------------------------------
+
+def _counters(rng, phased=False):
+    """A plausible HMS counter dict; per-phase 2-vectors when phased."""
+    def val():
+        v = float(rng.integers(0, 1000))
+        if phased:
+            a = float(rng.integers(0, int(v) + 1))
+            return [a, v - a]
+        return v
+    return {k: val() for k in
+            ("demand_dram_rd", "demand_dram_wr", "demand_scm_rd",
+             "demand_scm_wr", "probe_cols", "meta_wr_cols",
+             "fill_dram_wr", "wb_dram_rd", "fill_scm_rd", "wb_scm_wr")}
+
+
+def _row(rng, trace_fp, config_key, workload="wl", policy="hms",
+         sha="a" * 8, host="h" * 12, phased=False, runtime=None):
+    counters = _counters(rng, phased=phased)
+    metrics = derive_metrics(counters)
+    metrics["runtime_cycles"] = (float(rng.integers(1, 10**6))
+                                 if runtime is None else runtime)
+    return SilverRow(trace_fp=trace_fp, config_key=config_key,
+                     git_sha=sha, host_id=host, engine="hms",
+                     workload=workload, n=1000,
+                     phases=2 if phased else 1, policy=policy,
+                     config={"knob": config_key}, counters=counters,
+                     metrics=metrics, sources=["gen"])
+
+
+def _population(seed, n_rows=14):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for i in range(n_rows):
+        rows.append(_row(
+            rng,
+            trace_fp=f"t{rng.integers(0, 3):015d}x",
+            config_key=f"c{i:03d}",
+            workload=f"wl{rng.integers(0, 2)}",
+            policy=("hms", "bear")[int(rng.integers(0, 2))],
+            phased=bool(rng.integers(0, 2))))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Gold invariants (property battery).
+# ---------------------------------------------------------------------------
+
+def _check_frontier_nondominated(seed):
+    rows = _population(seed)
+    for (wl, pol), front in frontier_view(rows).items():
+        # mutual non-domination on the frontier
+        for p in front:
+            assert not any(q.dominates(p) for q in front if q is not p), \
+                f"seed {seed}: dominated point on frontier {wl}/{pol}"
+        # every excluded candidate is dominated by a frontier point
+        cands = {}
+        for r in rows:
+            if r.workload != wl or (r.policy or r.engine) != pol:
+                continue
+            p = FrontierPoint.from_row(r)
+            if p is not None:
+                cands.setdefault(p.ident, p)
+        on = {p.ident for p in front}
+        for ident, p in cands.items():
+            if ident not in on:
+                assert any(q.dominates(p) for q in front), \
+                    f"seed {seed}: non-dominated point excluded {ident}"
+
+
+def _check_frontier_order_invariance(seed):
+    rows = _population(seed)
+    fv1 = frontier_view(rows)
+    shuffled = list(rows)
+    random.Random(seed).shuffle(shuffled)
+    # duplicate a prefix: dedup must make re-ingestion invisible
+    fv2 = frontier_view(shuffled + shuffled[:5])
+    assert {g: [p.ident for p in f] for g, f in fv1.items()} \
+        == {g: [p.ident for p in f] for g, f in fv2.items()}
+
+
+def _check_self_diff_empty(seed):
+    rows = _population(seed)
+    diff = frontier_diff(rows, rows)
+    assert diff.empty and not diff.regressions
+    # and through a store round trip (persist -> reload -> diff)
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        s = SilverStore(d)
+        for r in rows:
+            s.add(r)
+        s.close()
+        s2 = SilverStore(d)
+        diff2 = frontier_diff(rows, s2.rows())
+        s2.close()
+    assert diff2.empty, f"seed {seed}: store round trip moved the frontier"
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(st.integers(min_value=0, max_value=2**20))
+    def test_frontier_nondominated_property(seed):
+        _check_frontier_nondominated(seed)
+
+    @settings(max_examples=20, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(st.integers(min_value=0, max_value=2**20))
+    def test_frontier_order_invariance_property(seed):
+        _check_frontier_order_invariance(seed)
+
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(st.integers(min_value=0, max_value=2**20))
+    def test_self_diff_empty_property(seed):
+        _check_self_diff_empty(seed)
+else:
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_frontier_nondominated_property(seed):
+        _check_frontier_nondominated(seed)
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_frontier_order_invariance_property(seed):
+        _check_frontier_order_invariance(seed)
+
+    @pytest.mark.parametrize("seed", SEEDS[:4])
+    def test_self_diff_empty_property(seed):
+        _check_self_diff_empty(seed)
+
+
+def test_pareto_known_answer():
+    """Hand-checkable 2-config case: domination and survival."""
+    rng = np.random.default_rng(0)
+    a = _row(rng, "t" * 16, "ca", runtime=100.0)
+    b = _row(rng, "t" * 16, "cb", runtime=200.0)
+    # make a dominate b on every axis
+    for ax in AXES:
+        b.metrics[ax] = a.metrics[ax] + 1.0
+    front = frontier_view([a, b])[("wl", "hms")]
+    assert [p.config_key for p in front] == ["ca"]
+    best = best_configs([a, b])
+    assert best["wl"].config_key == "ca"
+
+
+def test_frontier_diff_detects_regression_and_exit():
+    rng = np.random.default_rng(1)
+    old = [_row(rng, "t" * 16, "ca", runtime=100.0),
+           _row(rng, "t" * 16, "cb", runtime=90.0)]
+    # disjoint traffic trade-off: both on the frontier
+    old[0].metrics["traffic_bytes"] = 50.0
+    old[1].metrics["traffic_bytes"] = 60.0
+    old[0].metrics["probe_bytes"] = old[1].metrics["probe_bytes"] = 5.0
+    new = [SilverRow.from_dict(r.to_dict()) for r in old]
+    new[0].metrics = dict(new[0].metrics)
+    new[0].metrics["runtime_cycles"] = 150.0     # ca regresses, stays on
+    diff = frontier_diff(old, new)
+    assert not diff.empty
+    assert any(r["axis"] == "runtime_cycles" and r["delta"] == 50.0
+               for r in diff.regressions)
+    # ca worsened past cb on runtime but still wins on traffic: changed,
+    # not left
+    assert diff.left == {}
+
+
+def test_frontier_diff_entered_left():
+    rng = np.random.default_rng(2)
+    a = _row(rng, "t" * 16, "ca", runtime=100.0)
+    b = _row(rng, "u" * 16, "cb", runtime=50.0)
+    for ax in AXES:                    # b dominates a outright
+        b.metrics[ax] = a.metrics[ax] - 1.0
+    b.metrics["runtime_cycles"] = 50.0
+    diff = frontier_diff([a], [a, b])
+    assert any("cb" in k for ks in diff.entered.values() for k in ks)
+    assert any("ca" in k for ks in diff.left.values() for k in ks)
+    # the exit is recorded as a frontier-level regression with its
+    # dominator named
+    fr = [r for r in diff.regressions if r["axis"] == "frontier"]
+    assert fr and any("cb" in d for d in fr[0]["dominated_by"])
+
+
+# ---------------------------------------------------------------------------
+# Silver semantics.
+# ---------------------------------------------------------------------------
+
+def test_counter_totals_bit_equality():
+    c_vec = {"x": [1.25, 2.5, 0.125], "y": 7.0}
+    c_tot = {"x": float(np.sum(np.asarray([1.25, 2.5, 0.125]))), "y": 7.0}
+    assert counter_totals(c_vec) == counter_totals(c_tot)
+
+
+def test_merge_vector_wins_and_dedup(tmp_path):
+    rng = np.random.default_rng(3)
+    scalar = _row(rng, "t" * 16, "ca")
+    phased = SilverRow.from_dict(scalar.to_dict())
+    phased.sources = ["other"]
+    phased.counters = {k: [v / 2, v / 2] if not isinstance(v, list) else v
+                       for k, v in scalar.counters.items()}
+    s = SilverStore(str(tmp_path))
+    assert s.add(scalar) == "added"
+    assert s.add(SilverRow.from_dict(scalar.to_dict())) == "dup"
+    assert s.add(phased) == "merged"
+    row = s.rows()[0]
+    assert isinstance(row.counters["demand_dram_rd"], list)
+    assert set(row.sources) == {"gen", "other"}
+    # totals preserved bit-for-bit through the merge
+    assert counter_totals(row.counters) == counter_totals(scalar.counters)
+    s.close()
+    # reload replays the journal to the same state
+    s2 = SilverStore(str(tmp_path))
+    assert len(s2) == 1
+    assert s2.rows()[0].counters == row.counters
+    s2.close()
+
+
+def test_conflict_warns_and_keeps_first():
+    rng = np.random.default_rng(4)
+    a = _row(rng, "t" * 16, "ca")
+    b = SilverRow.from_dict(a.to_dict())
+    b.counters = dict(b.counters)
+    b.counters["demand_dram_rd"] = 1e9        # totals disagree
+    s = SilverStore()
+    assert s.add(a) == "added"
+    with pytest.warns(RuntimeWarning, match="silver conflict"):
+        assert s.add(b) == "conflict"
+    assert s.rows()[0].counters["demand_dram_rd"] \
+        == a.counters["demand_dram_rd"]
+
+
+def test_store_skips_torn_tail(tmp_path):
+    rng = np.random.default_rng(5)
+    s = SilverStore(str(tmp_path))
+    s.add(_row(rng, "t" * 16, "ca"))
+    s.close()
+    with open(tmp_path / "silver.jsonl", "a") as f:
+        f.write('{"trace_fp": "torn mid-wri')
+    with pytest.warns(RuntimeWarning, match="torn/corrupt"):
+        s2 = SilverStore(str(tmp_path))
+    assert len(s2) == 1
+    s2.close()
+
+
+def test_host_id_stable_and_sensitive():
+    h = {"platform": "linux", "machine": "x86_64", "cpu_count": 8,
+         "python": "3.10", "jax": "0.4", "jax_backend": "cpu",
+         "wall_s": 1.23}
+    assert host_id(h) == host_id({**h, "wall_s": 9.9})   # run-varying: out
+    assert host_id(h) != host_id({**h, "machine": "arm64"})
+    assert len(host_id(None)) == 12
+
+
+def test_derive_metrics_matches_bus_accounting():
+    from repro.core.timing import COLUMN_BYTES
+    c = {"demand_dram_rd": 10.0, "demand_dram_wr": 4.0,
+         "demand_scm_rd": 6.0, "demand_scm_wr": 2.0,
+         "probe_cols": 3.0, "meta_wr_cols": 1.0, "fill_dram_wr": 5.0,
+         "wb_dram_rd": 2.0, "fill_scm_rd": 5.0, "wb_scm_wr": 2.0}
+    m = derive_metrics(c)
+    assert m["dram_bytes"] == 25.0 * COLUMN_BYTES
+    assert m["scm_bytes"] == 15.0 * COLUMN_BYTES
+    assert m["traffic_bytes"] == m["dram_bytes"] + m["scm_bytes"]
+    assert m["probe_bytes"] == 4.0 * COLUMN_BYTES
+
+
+# ---------------------------------------------------------------------------
+# Bronze ingestion: the three artifact shapes + the engine ledger.
+# ---------------------------------------------------------------------------
+
+def _sweep_artifact():
+    rng = np.random.default_rng(6)
+    return {
+        "n": 1000, "grid_points": 2,
+        "grid": [{"tag_layout": "amil"}, {"tag_layout": "tad"}],
+        "host": {"platform": "linux", "git_sha": "a" * 40},
+        "workloads": {"bfs_tu": {
+            "n": 1000, "points": 2,
+            "trace_fp": "f" * 16,
+            "point_config_digests": ["d0" * 8, "d1" * 8],
+            "point_counters": [_counters(rng), _counters(rng)],
+            "point_runtime_cycles": [100.0, 200.0],
+            "wall_s": 0.5,
+        }},
+    }
+
+
+def _um_artifact():
+    return {
+        "n": 1000,
+        "host": {"platform": "linux", "git_sha": "b" * 40},
+        "workloads": {"bfs_tu": {
+            "n": 1000, "trace_fp": "f" * 16,
+            "points": [{
+                "rel_footprint": 2.0, "nvlink": False,
+                "spec_key": "F8:c16:nv0:h4",
+                "counters": {"um_faults": [3.0, 1.0],
+                             "um_migrated": [2.0, 0.0],
+                             "um_writebacks": [1.0, 0.0],
+                             "um_remote_cols": [0.0, 0.0]},
+                "faults": 4.0, "link_bytes": 64.0,
+            }],
+        }},
+    }
+
+
+def test_ingest_artifact_shapes_and_reingest_noop(tmp_path):
+    sweep = tmp_path / "BENCH_sweep.json"
+    sweep.write_text(json.dumps(_sweep_artifact()))
+    um = tmp_path / "BENCH_um.json"
+    um.write_text(json.dumps(_um_artifact()))
+    s = SilverStore()
+    st1 = s.ingest(str(sweep))
+    st2 = s.ingest(str(um))
+    assert (st1.added, st1.skipped) == (2, 0)
+    assert (st2.added, st2.skipped) == (1, 0)
+    row = [r for r in s.rows() if r.engine == "um"][0]
+    assert row.config_key == "F8:c16:nv0:h4"
+    assert row.metrics["um_faults"] == 4.0
+    # re-ingest: complete no-op
+    st3 = s.ingest(str(sweep))
+    st4 = s.ingest(str(um))
+    assert st3.added == st3.merged == 0 and st3.dups == 2
+    assert st4.added == st4.merged == 0 and st4.dups == 1
+    # sweep rows carry config knobs from the grid + runtime metric
+    swrow = [r for r in s.rows() if r.config_key == "d0" * 8][0]
+    assert swrow.config == {"tag_layout": "amil"}
+    assert swrow.metrics["runtime_cycles"] == 100.0
+
+
+def test_ingest_pre_store_artifact_skips(tmp_path):
+    art = _sweep_artifact()
+    del art["workloads"]["bfs_tu"]["trace_fp"]     # pre-PR-9 artifact
+    p = tmp_path / "BENCH_sweep.json"
+    p.write_text(json.dumps(art))
+    s = SilverStore()
+    stats = s.ingest(str(p))
+    assert stats.added == 0 and stats.skipped == 2
+
+
+def test_ingest_ledger_joins_bench(tmp_path):
+    """The tentpole join: an engine ledger lane and a bench point that
+    share (trace_fp, config digest, sha, host) merge into one row with
+    per-phase counters AND the bench-side runtime metric."""
+    from repro import obs
+    from repro.core import simulate
+    from repro.core.traces import Trace
+    from repro.resilience import sweepckpt
+    from repro.core import HMSConfig
+
+    rng = np.random.default_rng(7)
+    n, fp = 3000, 2 * 2**20
+    t = Trace("store_join", rng.integers(0, fp // 32, n).astype(np.int64),
+              rng.random(n) < 0.3, fp)
+    cfg = HMSConfig(footprint=fp)
+    obs.clear_records()
+    obs.enable(str(tmp_path / "obs"))
+    try:
+        r = simulate(t, cfg)
+    finally:
+        obs.disable()
+        obs.clear_records()
+
+    host = obs.host_metadata()
+    art = {
+        "host": host,
+        "workloads": {"store_join": {
+            "n": n, "points": 1,
+            "trace_fp": sweepckpt.trace_fingerprint(t),
+            "point_config_digests": [sweepckpt.config_digest(cfg)],
+            "point_counters": [sweepckpt.encode_counters(r.counters)],
+            "point_runtime_cycles": [r.runtime_cycles],
+        }},
+    }
+    p = tmp_path / "BENCH_sweep.json"
+    p.write_text(json.dumps(art))
+
+    s = SilverStore()
+    st_l = s.ingest(str(tmp_path / "obs" / "ledger.jsonl"))
+    st_b = s.ingest(str(p))
+    assert st_l.added == 1
+    assert st_b.merged == 1 and st_b.added == 0 and st_b.conflicts == 0
+    row = s.rows()[0]
+    assert len(row.sources) == 2
+    assert row.metrics["runtime_cycles"] == r.runtime_cycles
+    # frontier candidate now complete
+    assert FrontierPoint.from_row(row) is not None
+
+
+def test_ingest_ckpt_journal(tmp_path):
+    from repro.resilience import sweepckpt
+    ck = sweepckpt.SweepCheckpoint(str(tmp_path))
+    ck.put("hms", "f" * 16, "d0" * 8,
+           sweepckpt.encode_counters({"demand_dram_rd": 5.0,
+                                      "demand_dram_wr": 1.0,
+                                      "demand_scm_rd": 2.0,
+                                      "demand_scm_wr": 0.0}))
+    ck.close()
+    s = SilverStore()
+    stats = s.ingest(str(tmp_path / "sweep_ckpt.jsonl"))
+    assert stats.added == 1
+    assert s.rows()[0].metrics["traffic_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Report rendering + CLI.
+# ---------------------------------------------------------------------------
+
+def test_render_markdown_sections():
+    rng = np.random.default_rng(8)
+    s = SilverStore()
+    for r in _population(9):
+        s.add(r)
+    diff = frontier_diff(s.rows(), s.rows())
+    md = render_markdown(s, diff=diff)
+    assert "# Design-space report" in md
+    assert "## Pareto frontiers" in md
+    assert "## Best config per workload" in md
+    assert "Frontiers identical" in md
+
+
+def test_report_cli_end_to_end(tmp_path):
+    from benchmarks.report import main
+    sweep = tmp_path / "BENCH_sweep.json"
+    sweep.write_text(json.dumps(_sweep_artifact()))
+    # a second "independent run" of the same sweep at another commit,
+    # counters bit-identical (the engines' cross-host guarantee)
+    art2 = _sweep_artifact()
+    art2["host"]["git_sha"] = "c" * 40
+    sweep2 = tmp_path / "BENCH_sweep2.json"
+    sweep2.write_text(json.dumps(art2))
+
+    out = tmp_path / "report"
+    store = tmp_path / "store"
+    rc = main([str(sweep), str(sweep2), "--store", str(store),
+               "--out", str(out), "--no-figures",
+               "--fail-on-regression"])
+    assert rc == 0
+    md = (out / "report.md").read_text()
+    assert "Frontiers identical" in md           # auto cross-PR diff ran
+    assert (store / "silver.jsonl").exists()
+
+    # same store, explicit --diff by sha prefix; still identical
+    rc = main([str(sweep), str(sweep2), "--store", str(store),
+               "--out", str(out), "--no-figures", "--diff", "aaaa", "cccc",
+               "--fail-on-regression"])
+    assert rc == 0
+
+    # regress one runtime at the new sha: gate trips
+    art2["workloads"]["bfs_tu"]["point_runtime_cycles"][0] = 1e9
+    sweep2.write_text(json.dumps(art2))
+    rc = main([str(sweep), str(sweep2), "--store", "memory",
+               "--out", str(out), "--no-figures",
+               "--fail-on-regression"])
+    assert rc == 1
+
+
+def test_report_cli_empty_store(tmp_path):
+    from benchmarks.report import main
+    assert main([str(tmp_path), "--store", "memory",
+                 "--out", str(tmp_path / "r")]) == 3
