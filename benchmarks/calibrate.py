@@ -1,0 +1,79 @@
+"""Cost-model calibration CLI: measure this host, persist its profile.
+
+Runs the timed-step profiler (``repro.core.calibrate.run_calibration``)
+— a short grid of throwaway scans at forced (S, T) shapes through both
+engines, compile excluded, median-of-k timing — prints the measured
+constants next to the committed defaults, and persists the resulting
+per-host profile under ``REPRO_CALIB_DIR`` (or
+``benchmarks/calibration``) keyed by the host fingerprint:
+
+    PYTHONPATH=src python -m benchmarks.calibrate [--quick] [--dir DIR]
+        [--dry-run]
+
+Afterwards any run with ``REPRO_CALIB=auto`` (the default) picks the
+profile up; ``REPRO_CALIB=off`` ignores it.  Profiles change only which
+(S, T) shape the planner selects — model counters and digests are
+bit-identical under any profile.
+
+Exit codes: 0 ok; 3 usage.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+_FIELDS = (
+    ("step_cost_solo", "HMS solo step cost (us)"),
+    ("step_overhead", "HMS sharded overhead (us)"),
+    ("lane_cost", "HMS per-lane cost (us)"),
+    ("um_step_cost_solo", "UM solo step cost (us)"),
+    ("um_step_overhead", "UM sharded overhead (us)"),
+    ("um_lane_cost", "UM per-lane cost (us)"),
+    ("rounds_base", "stitch rounds base"),
+    ("rounds_slope", "stitch rounds slope"),
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.calibrate",
+        description="Measure this host's step costs and persist a "
+                    "calibration profile for the (S, T) planner.")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller trace and fewer timing reps (CI mode)")
+    ap.add_argument("--dir", default=None, metavar="DIR",
+                    help="profile directory (default: REPRO_CALIB_DIR "
+                         "or benchmarks/calibration)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="measure and print, but do not persist")
+    try:
+        args = ap.parse_args(argv)
+    except SystemExit:
+        return 3
+
+    from repro.core import calibrate
+    from repro.core.costmodel import DEFAULT_PROFILE
+
+    print(f"calibrate: host {calibrate.host_fingerprint()} "
+          f"({'quick' if args.quick else 'full'} grid) ...")
+    profile = calibrate.run_calibration(quick=args.quick)
+
+    print(f"{'constant':<28} {'default':>12} {'measured':>12} {'ratio':>8}")
+    for name, label in _FIELDS:
+        d = getattr(DEFAULT_PROFILE, name)
+        m = getattr(profile, name)
+        ratio = m / d if d else float("inf")
+        print(f"{label:<28} {d:>12.3f} {m:>12.3f} {ratio:>7.2f}x")
+
+    if args.dry_run:
+        print("calibrate: --dry-run, profile not persisted")
+        return 0
+    path = calibrate.save_profile(profile, args.dir)
+    print(f"calibrate: wrote {path}")
+    print("calibrate: active for REPRO_CALIB=auto runs on this host")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

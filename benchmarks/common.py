@@ -72,18 +72,24 @@ def host_metadata() -> Dict[str, object]:
     """Host descriptor embedded in benchmark JSON artifacts so wall-clock
     numbers (and the shard cost model behind them) are comparable across
     machines: the obs identity block (platform, Python/JAX versions, git
-    SHA + dirty flag) plus the cost-model constants and caps the engine
-    selected its (shards x segments) execution shape with."""
+    SHA + dirty flag) plus the *active* cost-model profile and caps the
+    engine selected its (shards x segments) execution shape with — under
+    a calibrated profile these are the measured constants, not the
+    committed defaults."""
     from repro.core import costmodel
 
+    prof = costmodel.active_profile()
     return {
         **obs.host_metadata(),
-        "step_cost_solo": costmodel.STEP_COST_SOLO,
-        "step_cost_overhead": costmodel.STEP_OVERHEAD,
-        "step_cost_lane": costmodel.LANE_COST,
-        "um_step_cost_solo": costmodel.UM_STEP_COST_SOLO,
-        "um_step_cost_overhead": costmodel.UM_STEP_OVERHEAD,
-        "um_step_cost_lane": costmodel.UM_LANE_COST,
+        "step_cost_solo": prof.step_cost_solo,
+        "step_cost_overhead": prof.step_overhead,
+        "step_cost_lane": prof.lane_cost,
+        "um_step_cost_solo": prof.um_step_cost_solo,
+        "um_step_cost_overhead": prof.um_step_overhead,
+        "um_step_cost_lane": prof.um_lane_cost,
+        "calib_fingerprint": prof.fingerprint,
+        "calib_source": prof.source,
+        "calib_mode": costmodel.calib_mode(),
         "max_shards": costmodel.max_shards(),
         "max_tsplit": costmodel.max_tsplit(),
         "env_repro_shards": os.environ.get("REPRO_SHARDS"),

@@ -28,12 +28,18 @@ from typing import Iterator, List, Optional, Tuple
 INFO_SUBTREES = ("host", "figures")      # identity / output paths
 TIMING_SUFFIXES = ("_s", "us_per_point", "us_per_call")
 # execution-shape keys (shard counts, temporal segments, stitch rounds,
-# replay prefixes), measured speedups, and resilience bookkeeping (which
-# degradation-ladder rung ran, checkpoint replay state) legitimately vary
-# across hosts and runs — the parity suites pin the *counters* regardless
-# of shape, and "partial" only ever flips false->absent on a finished run
+# replay prefixes), measured speedups, resilience bookkeeping (which
+# degradation-ladder rung ran, checkpoint replay state), and cost-model
+# calibration keys (predicted plan costs, regret, profile fingerprints)
+# legitimately vary across hosts and runs — the parity suites pin the
+# *counters* regardless of shape or profile, and "partial" only ever
+# flips false->absent on a finished run.  Note "plan_predicted_us" ends
+# in "_us", not the "_s" timing suffix — it is classified here, not as a
+# gated timing.
 INFO_MARKERS = ("shard", "speedup", "ts", "stitch", "segment", "replay",
-                "degradation", "ladder", "resume", "ckpt", "partial")
+                "degradation", "ladder", "resume", "ckpt", "partial",
+                "plan", "predicted", "regret", "calib", "alternative",
+                "fingerprint", "misplan")
 INFO_SUFFIXES = ("depth", "retries")
 
 _TOKEN_SPLIT = re.compile(r"[^a-z0-9]+")

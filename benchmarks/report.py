@@ -4,8 +4,11 @@ Ingests every bronze evidence source it is pointed at — ``BENCH_*.json``
 benchmark artifacts, obs run-ledger JSONL, resumable-sweep checkpoint
 journals — into the silver store (``REPRO_STORE_DIR`` or ``--store``),
 then renders the gold views: per-workload Pareto frontiers on (runtime,
-DRAM+SCM traffic, probe traffic), the best-config table, and — when the
-store spans more than one commit — the cross-PR frontier diff.
+DRAM+SCM traffic, probe traffic), the best-config table, the
+planner-accuracy view (predicted-vs-measured plan costs, regret, and the
+mis-plan table — present when the ingested ledgers carry schema-4 plan
+telemetry), and — when the store spans more than one commit — the
+cross-PR frontier diff.
 
 With no sources given, everything under ``benchmarks/artifacts`` and
 ``benchmarks/baselines`` is ingested, so a fresh sweep plus the committed
@@ -92,7 +95,7 @@ def main(argv=None) -> int:
 
     from repro.obs.store import (SilverStore, default_store_dir,
                                  frontier_diff, render_figures,
-                                 render_markdown)
+                                 render_markdown, render_planner_figure)
 
     # baselines before artifacts: first-ingested rows carry the earlier
     # store timestamps, which is what the auto-diff below orders OLD ->
@@ -133,11 +136,16 @@ def main(argv=None) -> int:
     figs: List[str] = []
     if not args.no_figures:
         figs = render_figures(rows, os.path.join(out_dir, "figs"))
+        planner_fig = render_planner_figure(
+            store.plan_rows(), os.path.join(out_dir, "figs"))
+        if planner_fig:
+            figs.append(planner_fig)
     store.close()
 
     s = store.summary()
     print(f"report: {s['rows']} rows | workloads={len(s['workloads'])} "
-          f"commits={len(s['git_shas'])} hosts={len(s['hosts'])}")
+          f"commits={len(s['git_shas'])} hosts={len(s['hosts'])} "
+          f"plan_rows={s['plan_rows']}")
     print(f"report: wrote {md_path}" +
           (f" + {len(figs)} figure(s)" if figs else ""))
     if diff is not None:

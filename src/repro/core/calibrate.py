@@ -1,0 +1,332 @@
+"""Timed-step profiler + per-host calibration profiles for the (S, T) planner.
+
+``costmodel``'s six step-cost constants and the ``rounds_estimate`` line
+were measured once on a 2-core CPU box; any wider host silently gets
+mis-planned splits.  This module re-measures them *on the host actually
+underneath*: a short grid of throwaway scans at controlled lane counts
+through both engines (forced (S, T) shapes; compile excluded via a warm-up
+call; median-of-k timing), a straight-line fit of the
+``solo / overhead / per-lane`` cost shape, and a ``rounds_estimate``
+correction read back from the ``stitch_rounds`` the obs ledger already
+records.  The result is a :class:`~repro.core.costmodel.CalibProfile`
+persisted as JSON keyed by a host fingerprint derived from
+``obs.host_metadata()``:
+
+    <REPRO_CALIB_DIR>/calib_<fingerprint>.json
+
+``REPRO_CALIB`` selects how the planner consumes it — ``off`` (committed
+defaults), ``auto`` (load if present, the default), ``force``
+(recalibrate now).  Profiles change only the *plan* (which (S, T) shape
+runs); every shape reproduces the sequential scan bit-for-bit, so model
+counters and digests are profile-independent by construction.
+
+JSON floats round-trip bitwise (``json`` serializes via ``repr`` and
+parses back to the same float64), so a saved profile plans identically
+to the in-memory one forever.
+
+Import rule: this module imports ``costmodel`` at module level (one
+direction); the engines are imported lazily inside the profiler so
+``costmodel``'s deferred ``from . import calibrate`` never cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import statistics
+import time
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import costmodel
+from .costmodel import CalibProfile, DEFAULT_PROFILE
+
+#: host_metadata keys that define calibration identity — stable across
+#: runs on one machine, different across machines that need different
+#: profiles (same subset the silver store's host_id hashes).
+_FINGERPRINT_KEYS = ("platform", "machine", "cpu_count", "python",
+                     "jax", "jax_backend")
+
+#: calibration trace/grid sizes: (trace_n, timing_reps)
+_FULL = (16384, 5)
+_QUICK = (6144, 3)
+
+_HMS_LANE_COUNTS = (1, 2, 4, 8)
+_UM_LANE_COUNTS = (1, 2, 4)
+_ROUNDS_TSPLITS = (2, 8)
+
+
+def host_fingerprint() -> str:
+    """12-hex identity of this host for calibration purposes, derived from
+    ``obs.host_metadata()`` (platform/machine/cpu/python/jax/backend —
+    git state deliberately excluded: a commit doesn't change the silicon).
+    """
+    from repro import obs
+    meta = obs.host_metadata()
+    payload = json.dumps({k: meta.get(k) for k in _FINGERPRINT_KEYS},
+                         sort_keys=True)
+    return hashlib.sha256(payload.encode()).hexdigest()[:12]
+
+
+def calib_dir() -> str:
+    """``REPRO_CALIB_DIR`` or ``benchmarks/calibration`` relative to the
+    repo the package runs from (same convention as the silver store)."""
+    env = os.environ.get("REPRO_CALIB_DIR")
+    if env:
+        return env
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.dirname(os.path.dirname(os.path.dirname(here)))
+    return os.path.join(root, "benchmarks", "calibration")
+
+
+def profile_path(fingerprint: Optional[str] = None,
+                 directory: Optional[str] = None) -> str:
+    fp = fingerprint or host_fingerprint()
+    return os.path.join(directory or calib_dir(), f"calib_{fp}.json")
+
+
+# --- JSON persistence (bitwise float round-trip) ---------------------------
+
+def profile_to_json(profile: CalibProfile) -> str:
+    return json.dumps(dataclasses.asdict(profile), indent=2,
+                      sort_keys=True) + "\n"
+
+
+def profile_from_json(text: str) -> CalibProfile:
+    raw = json.loads(text)
+    names = {f.name for f in dataclasses.fields(CalibProfile)}
+    return CalibProfile(**{k: v for k, v in raw.items() if k in names})
+
+
+def save_profile(profile: CalibProfile,
+                 directory: Optional[str] = None) -> str:
+    """Persist ``profile`` under its own fingerprint; returns the path."""
+    path = profile_path(profile.fingerprint, directory)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        fh.write(profile_to_json(profile))
+    os.replace(tmp, path)
+    return path
+
+
+def load_profile(path: str) -> Optional[CalibProfile]:
+    """Load one profile file; ``None`` if absent or unparseable (a corrupt
+    profile must degrade to defaults, never break the planner)."""
+    try:
+        with open(path) as fh:
+            return profile_from_json(fh.read())
+    except (OSError, ValueError, TypeError):
+        return None
+
+
+def load_host_profile(directory: Optional[str] = None
+                      ) -> Optional[CalibProfile]:
+    """The persisted profile for *this* host, or ``None``."""
+    return load_profile(profile_path(directory=directory))
+
+
+def ensure_host_profile(force: bool = False, quick: bool = True,
+                        directory: Optional[str] = None) -> CalibProfile:
+    """Load this host's profile, calibrating (and persisting) if absent —
+    or unconditionally when ``force``.  The ``REPRO_CALIB=force`` path."""
+    if not force:
+        existing = load_host_profile(directory)
+        if existing is not None:
+            return existing
+    profile = run_calibration(quick=quick)
+    save_profile(profile, directory)
+    return profile
+
+
+# --- the timed-step profiler -----------------------------------------------
+
+def _fit_line(points: Sequence[Tuple[float, float]]) -> Tuple[float, float]:
+    """Least-squares (slope, intercept) through ``(x, y)`` points; a single
+    point degrades to a horizontal line through it."""
+    if len(points) == 1:
+        return 0.0, points[0][1]
+    xb = sum(x for x, _ in points) / len(points)
+    yb = sum(y for _, y in points) / len(points)
+    den = sum((x - xb) ** 2 for x, _ in points)
+    slope = sum((x - xb) * (y - yb) for x, y in points) / den if den else 0.0
+    return slope, yb - slope * xb
+
+
+def _calib_trace(n: int):
+    """Deterministic throwaway trace: uniform columns over a small
+    footprint, 30% writes — wide enough to bin evenly, small enough that
+    a grid of scans stays in seconds."""
+    import numpy as np
+    from .traces import MiB, Trace
+
+    footprint = 8 * MiB
+    rng = np.random.default_rng(20260809)
+    cols = footprint // 32
+    return Trace(name="__calib__",
+                 col=rng.integers(0, cols, size=n).astype(np.int64),
+                 is_write=rng.random(n) < 0.3,
+                 footprint=footprint)
+
+
+class _forced_shape:
+    """Pin (S, T) for the duration of a timed probe, restoring on exit."""
+
+    def __init__(self, shards: Optional[int], t_segments: Optional[int]):
+        self._s, self._t = shards, t_segments
+
+    def __enter__(self):
+        self._old_s = costmodel.set_forced_shards(self._s)
+        self._old_t = costmodel.set_forced_tsplit(self._t)
+        return self
+
+    def __exit__(self, *exc):
+        costmodel.set_forced_shards(self._old_s)
+        costmodel.set_forced_tsplit(self._old_t)
+        return False
+
+
+def _median_wall(fn, reps: int, before=None) -> float:
+    """Median wall of ``reps`` calls, the compile already excluded by the
+    caller's warm-up call.  ``before`` (e.g. a result-memo reset) runs
+    outside the timed region."""
+    walls = []
+    for _ in range(reps):
+        if before is not None:
+            before()
+        t0 = time.perf_counter()
+        fn()
+        walls.append(time.perf_counter() - t0)
+    return statistics.median(walls)
+
+
+def _profile_hms(trace, cfg, reps: int,
+                 lane_counts: Sequence[int]) -> Dict[int, float]:
+    """Measured per-step cost (us) of the HMS lean scan by lane count:
+    forced (S, 1) shapes, batch 1, so lanes == S exactly."""
+    from . import simulator, traces
+
+    per_step: Dict[int, float] = {}
+    for s in lane_counts:
+        with _forced_shape(s, 1):
+            simulator.simulate(trace, cfg)          # warm-up: compiles
+            wall = _median_wall(lambda: simulator.simulate(trace, cfg),
+                                reps)
+        depth = traces.shard_depth(trace, cfg, s)
+        per_step[s] = wall * 1e6 / max(1, depth)
+    return per_step
+
+
+def _profile_um(trace, reps: int,
+                lane_counts: Sequence[int]) -> Dict[int, float]:
+    """Measured per-step cost (us) of the UM paging scan by lane count:
+    forced T=1, ``width`` distinct specs, so lanes == width exactly.  The
+    per-trace result memo is dropped (compiled engines kept) before every
+    timed call, else repeats would measure a dict lookup."""
+    from repro import obs
+    from repro.um import engine as um
+
+    frames = 32
+    per_step: Dict[int, float] = {}
+    for width in lane_counts:
+        specs = [um.UMSpec(n_frames=frames + i, chunk=4)
+                 for i in range(width)]
+        with _forced_shape(None, 1):
+            um.simulate_um_many(trace, specs)       # warm-up: compiles
+            wall = _median_wall(
+                lambda: um.simulate_um_many(trace, specs), reps,
+                before=lambda: obs.reset(hms=False, keep_compiled=True))
+        per_step[width] = wall * 1e6 / max(1, trace.n)
+    return per_step
+
+
+def _measure_stitch_rounds(trace, cfg,
+                           tsplits: Sequence[int]) -> List[Tuple[int, float]]:
+    """Run forced (1, T) scans and read the ``stitch_rounds`` each run's
+    ledger record captured — the measured settling behavior the
+    ``rounds_estimate`` line is fit against."""
+    from repro import obs
+    from . import simulator
+
+    owned = not obs.enabled()
+    if owned:
+        obs.enable(None)
+    try:
+        out = []
+        for t in tsplits:
+            with _forced_shape(1, t):
+                simulator.simulate(trace, cfg)
+            rounds = next(
+                (r.stitch_rounds for r in reversed(obs.records())
+                 if r.engine == "hms" and r.trace == trace.name
+                 and r.t_segments == t and r.stitch_rounds), None)
+            if rounds is not None:
+                out.append((t, float(rounds)))
+        return out
+    finally:
+        if owned:
+            obs.disable()
+
+
+def _fit_rounds(samples: Sequence[Tuple[int, float]]
+                ) -> Tuple[float, float]:
+    """Fit ``rounds = base + slope * (log2(T) - 1)`` to measured stitch
+    rounds; falls back to the committed line when nothing was measured."""
+    import math
+
+    if not samples:
+        return DEFAULT_PROFILE.rounds_base, DEFAULT_PROFILE.rounds_slope
+    pts = [(math.log2(t) - 1.0, r) for t, r in samples]
+    slope, base = _fit_line(pts)
+    return max(1.0, base), max(0.0, slope)
+
+
+def run_calibration(quick: bool = False, n: Optional[int] = None,
+                    reps: Optional[int] = None) -> CalibProfile:
+    """Measure this host and return a fresh :class:`CalibProfile`.
+
+    Runs the timed-step grid through both engines (throwaway scans at
+    forced shapes; the first call per shape compiles and is excluded;
+    ``reps`` further calls are medianed), fits the cost shape, and fits
+    the rounds line against ledger-measured ``stitch_rounds``.  Does NOT
+    activate or persist the result — callers compose that
+    (:func:`ensure_host_profile`, the ``benchmarks.calibrate`` CLI).
+    """
+    from .timing import HMSConfig
+
+    grid_n, grid_reps = _QUICK if quick else _FULL
+    grid_n = n if n is not None else grid_n
+    grid_reps = reps if reps is not None else grid_reps
+
+    trace = _calib_trace(grid_n)
+    cfg = HMSConfig(footprint=trace.footprint)
+
+    with warnings.catch_warnings():
+        # probe shapes are deliberately mis-planned; the drift sentinel
+        # has nothing to learn from them
+        warnings.simplefilter("ignore", costmodel.CalibrationDriftWarning)
+        hms = _profile_hms(trace, cfg, grid_reps, _HMS_LANE_COUNTS)
+        um = _profile_um(trace, grid_reps, _UM_LANE_COUNTS)
+        rounds = _measure_stitch_rounds(trace, cfg, _ROUNDS_TSPLITS)
+
+    lane_cost, overhead = _fit_line(
+        [(s, c) for s, c in hms.items() if s > 1])
+    um_lane_cost, um_overhead = _fit_line(
+        [(w, c) for w, c in um.items() if w > 1])
+    rounds_base, rounds_slope = _fit_rounds(rounds)
+
+    return CalibProfile(
+        step_cost_solo=max(1e-3, hms[1]),
+        step_overhead=max(0.0, overhead),
+        lane_cost=max(1e-3, lane_cost),
+        um_step_cost_solo=max(1e-3, um[1]),
+        um_step_overhead=max(0.0, um_overhead),
+        um_lane_cost=max(1e-3, um_lane_cost),
+        rounds_base=rounds_base,
+        rounds_slope=rounds_slope,
+        fingerprint=host_fingerprint(),
+        source="measured",
+        created_ts=time.time(),
+    )

@@ -13,12 +13,17 @@ engines used to scatter across ``simulator.py`` and ``um/engine.py``:
 Env knobs (also settable programmatically; see README "Environment
 knobs"):
 
-  ============== ======= ==================================================
-  variable       default meaning
-  ============== ======= ==================================================
-  REPRO_SHARDS   64      cap on spatial shards S (1 = sequential scan)
-  REPRO_TSPLIT   16      cap on temporal segments T (1 = no splitting)
-  ============== ======= ==================================================
+  ================= ======= ===============================================
+  variable          default meaning
+  ================= ======= ===============================================
+  REPRO_SHARDS      64      cap on spatial shards S (1 = sequential scan)
+  REPRO_TSPLIT      16      cap on temporal segments T (1 = no splitting)
+  REPRO_CALIB       auto    off | auto | force — which calibration profile
+                            the planner costs shapes with
+  REPRO_CALIB_DIR   (repo)  where per-host calibration profiles live
+  REPRO_CALIB_DRIFT 25      wall/prediction ratio before the drift
+                            sentinel warns (never fails)
+  ================= ======= ===============================================
 
 Cost shape
 ----------
@@ -42,12 +47,17 @@ depth at low S, and the UM paging scan, which cannot shard at all.
 
 from __future__ import annotations
 
+import dataclasses
 import math
 import os
-from typing import Callable, Optional, Tuple
+import warnings
+from typing import Callable, Dict, List, Optional, Tuple
 
 # --- measured per-step scan costs, microseconds (CPU host; the *shape* is
-# what matters, exact constants only move the break-even points) ----------
+# what matters, exact constants only move the break-even points).  These
+# constants double as the committed default calibration profile — a timed-
+# step profiler (``repro.core.calibrate``) can re-measure them per host and
+# the choosers below read whichever profile is active. ----------------------
 STEP_COST_SOLO = 19.0      # a 1-lane HMS scan falls off the vector path
 STEP_OVERHEAD = 3.0
 LANE_COST = 1.0
@@ -58,20 +68,119 @@ UM_STEP_COST_SOLO = 30.0
 UM_STEP_OVERHEAD = 6.0
 UM_LANE_COST = 3.0
 
+# rounds_estimate(T) defaults: base + slope * (log2(T) - 1) for T > 1.
+ROUNDS_BASE = 2.0
+ROUNDS_SLOPE = 0.25
+
+
+# --- calibration profile ----------------------------------------------------
+
+PROFILE_SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibProfile:
+    """One host's measured cost-model constants (or the committed default).
+
+    The six step-cost constants plus the rounds-estimate line are the full
+    parameterization of the (S, T) planner; ``fingerprint`` names the host
+    the numbers were measured on (``"default"`` for the committed
+    constants) and rides into every ledger record as ``calib_fingerprint``
+    so mis-plans are attributable to the profile that planned them.
+    """
+
+    step_cost_solo: float = STEP_COST_SOLO
+    step_overhead: float = STEP_OVERHEAD
+    lane_cost: float = LANE_COST
+    um_step_cost_solo: float = UM_STEP_COST_SOLO
+    um_step_overhead: float = UM_STEP_OVERHEAD
+    um_lane_cost: float = UM_LANE_COST
+    rounds_base: float = ROUNDS_BASE
+    rounds_slope: float = ROUNDS_SLOPE
+    fingerprint: str = "default"
+    source: str = "default"        # "default" | "measured"
+    created_ts: float = 0.0
+    schema: int = PROFILE_SCHEMA_VERSION
+
+
+DEFAULT_PROFILE = CalibProfile()
+
+_ACTIVE_PROFILE: Optional[CalibProfile] = None
+_PROFILE_RESOLVED = False
+_CALIB_MODE: Optional[str] = None
+
+
+def calib_mode() -> str:
+    """Active calibration mode: ``off`` (committed defaults), ``auto``
+    (load the per-host profile if one exists under ``REPRO_CALIB_DIR``),
+    or ``force`` (recalibrate now, on first planner use)."""
+    if _CALIB_MODE is not None:
+        return _CALIB_MODE
+    mode = os.environ.get("REPRO_CALIB", "auto").strip().lower()
+    return mode if mode in ("off", "auto", "force") else "auto"
+
+
+def set_calib_mode(mode: Optional[str]) -> Optional[str]:
+    """Pin the calibration mode programmatically (``None`` restores the
+    ``REPRO_CALIB`` env default) and drop the resolved profile so the next
+    planner call re-resolves; returns the previous pinned value."""
+    global _CALIB_MODE, _PROFILE_RESOLVED, _ACTIVE_PROFILE
+    old = _CALIB_MODE
+    _CALIB_MODE = None if mode is None else str(mode).strip().lower()
+    _PROFILE_RESOLVED = False
+    _ACTIVE_PROFILE = None
+    return old
+
+
+def set_profile(profile: Optional[CalibProfile]) -> Optional[CalibProfile]:
+    """Pin the active calibration profile (tests, the calibrate CLI).
+    ``None`` drops back to mode resolution on next use; returns the
+    previously pinned/resolved profile (or ``None``)."""
+    global _ACTIVE_PROFILE, _PROFILE_RESOLVED
+    old = _ACTIVE_PROFILE if _PROFILE_RESOLVED else None
+    _ACTIVE_PROFILE = profile
+    _PROFILE_RESOLVED = profile is not None
+    return old
+
+
+def active_profile() -> CalibProfile:
+    """The profile the planner is using right now, resolved once per
+    process: ``off`` -> committed defaults, ``auto`` -> per-host profile
+    under ``REPRO_CALIB_DIR`` if present else defaults, ``force`` -> run
+    the quick timed-step profiler and persist the result."""
+    global _ACTIVE_PROFILE, _PROFILE_RESOLVED
+    if _PROFILE_RESOLVED:
+        return _ACTIVE_PROFILE
+    mode = calib_mode()
+    # Resolve to the default FIRST: force-mode calibration runs the engines,
+    # whose planner calls re-enter here and must see a settled profile.
+    _ACTIVE_PROFILE = DEFAULT_PROFILE
+    _PROFILE_RESOLVED = True
+    if mode == "off":
+        return _ACTIVE_PROFILE
+    from . import calibrate  # deferred: calibrate imports this module
+    if mode == "force":
+        _ACTIVE_PROFILE = calibrate.ensure_host_profile(force=True)
+    else:
+        _ACTIVE_PROFILE = calibrate.load_host_profile() or DEFAULT_PROFILE
+    return _ACTIVE_PROFILE
+
 
 def step_cost(lanes: int) -> float:
     """Modeled per-step cost of the HMS scan at ``lanes`` parallel lanes
     (shards x segments x batched configs)."""
+    p = active_profile()
     if lanes == 1:
-        return STEP_COST_SOLO
-    return STEP_OVERHEAD + LANE_COST * lanes
+        return p.step_cost_solo
+    return p.step_overhead + p.lane_cost * lanes
 
 
 def um_step_cost(lanes: int) -> float:
     """Same shape for the UM paging scan (lanes = specs x segments)."""
+    p = active_profile()
     if lanes == 1:
-        return UM_STEP_COST_SOLO
-    return UM_STEP_OVERHEAD + UM_LANE_COST * lanes
+        return p.um_step_cost_solo
+    return p.um_step_overhead + p.um_lane_cost * lanes
 
 
 def rounds_estimate(t_segments: int) -> float:
@@ -81,7 +190,9 @@ def rounds_estimate(t_segments: int) -> float:
     boundary per round, but usually many)."""
     if t_segments <= 1:
         return 1.0
-    return 2.0 + 0.25 * (math.log2(t_segments) - 1.0)
+    p = active_profile()
+    return max(1.0, p.rounds_base + p.rounds_slope
+               * (math.log2(t_segments) - 1.0))
 
 
 def degradation_ladder(shards: int, t_segments: int) -> list:
@@ -157,6 +268,33 @@ def forced_tsplit() -> Optional[int]:
 
 # --- choosers --------------------------------------------------------------
 
+#: rejected candidates kept on a plan (telemetry payload bound)
+_MAX_ALTERNATIVES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitPlan:
+    """One planner decision with its prediction and the rejected field.
+
+    ``predicted_us`` is the modeled cost of the chosen (S, T) under the
+    active profile; ``alternatives`` holds the cheapest rejected shapes
+    (each ``{"shards", "t_segments", "predicted_us"}``, ascending cost) so
+    the ledger can measure plan regret after the fact.  ``forced`` marks
+    shapes pinned by the override setters (no alternatives evaluated).
+    """
+
+    shards: int
+    t_segments: int
+    predicted_us: float
+    alternatives: Tuple[Dict[str, float], ...] = ()
+    forced: bool = False
+
+    @property
+    def best_alternative_us(self) -> Optional[float]:
+        return self.alternatives[0]["predicted_us"] \
+            if self.alternatives else None
+
+
 def _t_candidates(depth: int) -> list:
     out = [1]
     t = 2
@@ -166,10 +304,22 @@ def _t_candidates(depth: int) -> list:
     return out
 
 
-def choose_hms_split(depth_of: Callable[[int], int], batch: int,
-                     replay: int = 0) -> Tuple[int, int]:
+def _finish_plan(chosen: Tuple[float, int, int], evaluated: list,
+                 forced: bool = False) -> SplitPlan:
+    cost, s, t = chosen
+    rejected = sorted(((c, cs, ct) for c, cs, ct in evaluated
+                       if (cs, ct) != (s, t)))
+    alts = tuple({"shards": cs, "t_segments": ct, "predicted_us": c}
+                 for c, cs, ct in rejected[:_MAX_ALTERNATIVES])
+    return SplitPlan(shards=s, t_segments=t, predicted_us=cost,
+                     alternatives=alts, forced=forced)
+
+
+def plan_hms_split(depth_of: Callable[[int], int], batch: int,
+                   replay: int = 0) -> SplitPlan:
     """Pick (shards, t_segments) minimizing modeled HMS scan cost for one
-    compiled engine shared by ``batch`` configs.
+    compiled engine shared by ``batch`` configs, returning the full
+    :class:`SplitPlan` (prediction + rejected alternatives).
 
     ``depth_of(S)`` must return the real (LPT-binned) padded shard depth
     for shard count S — zipf traces bin unevenly, so depth is measured,
@@ -178,9 +328,15 @@ def choose_hms_split(depth_of: Callable[[int], int], batch: int,
     lanes, then fewer segments — the sequential-most shape)."""
     forced_s, forced_t = _FORCED_SHARDS, _FORCED_TSPLIT
     if forced_s is not None and forced_t is not None:
-        return forced_s, forced_t
+        depth = depth_of(forced_s)
+        seg = -(-depth // forced_t) + (replay if forced_t > 1 else 0)
+        cost = rounds_estimate(forced_t) \
+            * seg * step_cost(forced_s * forced_t * batch)
+        return SplitPlan(shards=forced_s, t_segments=forced_t,
+                         predicted_us=cost, forced=True)
 
     best = None  # (cost, lanes, t, s)
+    evaluated = []
     s = forced_s if forced_s is not None else 1
     s_cap = forced_s if forced_s is not None else _MAX_SHARDS
     while s <= s_cap:
@@ -190,21 +346,102 @@ def choose_hms_split(depth_of: Callable[[int], int], batch: int,
             seg = -(-depth // t) + (replay if t > 1 else 0)
             cost = rounds_estimate(t) * seg * step_cost(s * t * batch)
             cand = (cost, s * t, t, s)
+            evaluated.append((cost, s, t))
             if best is None or cost < 0.95 * best[0]:
                 best = cand
         s *= 2
-    return best[3], best[2]
+    return _finish_plan((best[0], best[3], best[2]), evaluated,
+                        forced=(forced_s is not None
+                                or forced_t is not None))
+
+
+def choose_hms_split(depth_of: Callable[[int], int], batch: int,
+                     replay: int = 0) -> Tuple[int, int]:
+    """(S, T) of :func:`plan_hms_split` — the historical tuple interface
+    both engines and the tests call."""
+    plan = plan_hms_split(depth_of, batch, replay)
+    return plan.shards, plan.t_segments
+
+
+def plan_um_split(n: int, width: int) -> SplitPlan:
+    """Temporal segment count for a UM paging batch of ``width`` spec
+    lanes over an n-request trace (the UM scan cannot shard, so T is its
+    only depth lever), returned as a :class:`SplitPlan` with S = 1."""
+    if _FORCED_TSPLIT is not None:
+        t = _FORCED_TSPLIT
+        cost = rounds_estimate(t) * (-(-n // t)) * um_step_cost(width * t)
+        return SplitPlan(shards=1, t_segments=t, predicted_us=cost,
+                         forced=True)
+    best_t, best_cost = 1, None
+    evaluated = []
+    for t in _t_candidates(n):
+        cost = rounds_estimate(t) * (-(-n // t)) * um_step_cost(width * t)
+        evaluated.append((cost, 1, t))
+        if best_cost is None or cost < 0.95 * best_cost:
+            best_t, best_cost = t, cost
+    return _finish_plan((best_cost, 1, best_t), evaluated)
 
 
 def choose_um_split(n: int, width: int) -> int:
-    """Temporal segment count for a UM paging batch of ``width`` spec
-    lanes over an n-request trace (the UM scan cannot shard, so T is its
-    only depth lever)."""
-    if _FORCED_TSPLIT is not None:
-        return _FORCED_TSPLIT
-    best_t, best_cost = 1, None
-    for t in _t_candidates(n):
-        cost = rounds_estimate(t) * (-(-n // t)) * um_step_cost(width * t)
-        if best_cost is None or cost < 0.95 * best_cost:
-            best_t, best_cost = t, cost
-    return best_t
+    """T of :func:`plan_um_split` — the historical scalar interface."""
+    return plan_um_split(n, width).t_segments
+
+
+# --- plan-drift sentinel ----------------------------------------------------
+
+class CalibrationDriftWarning(UserWarning):
+    """Measured engine wall deviates from the plan's prediction by more
+    than the drift factor — the active calibration profile no longer
+    describes this host.  Warns, never fails."""
+
+
+_DRIFT_FACTOR: Optional[float] = None
+_DRIFT_WARNED: set = set()
+
+
+def drift_factor() -> float:
+    """Allowed wall/prediction ratio (either direction) before the drift
+    sentinel warns; ``REPRO_CALIB_DRIFT`` (default 25) — generous because
+    the model predicts scan-step work only, not preprocessing or stitch
+    bookkeeping."""
+    if _DRIFT_FACTOR is not None:
+        return _DRIFT_FACTOR
+    try:
+        return max(1.0, float(os.environ.get("REPRO_CALIB_DRIFT", "25")))
+    except ValueError:
+        return 25.0
+
+
+def set_drift_factor(factor: Optional[float]) -> Optional[float]:
+    """Pin the drift factor programmatically (``None`` restores the env
+    default); returns the previous pinned value."""
+    global _DRIFT_FACTOR
+    old = _DRIFT_FACTOR
+    _DRIFT_FACTOR = None if factor is None else max(1.0, float(factor))
+    return old
+
+
+def check_plan_drift(fingerprint: str, predicted_us: Optional[float],
+                     wall_s: float, compiled: bool = False
+                     ) -> Optional[float]:
+    """Compare a measured engine wall against its plan's prediction and
+    warn (once per engine fingerprint) when the ratio leaves the drift
+    band.  Compile calls are excluded — tracing wall swamps the scan.
+    Returns the wall/prediction ratio when it warned, else ``None``."""
+    if compiled or not predicted_us or predicted_us <= 0.0 or wall_s <= 0.0:
+        return None
+    ratio = (wall_s * 1e6) / predicted_us
+    f = drift_factor()
+    if 1.0 / f <= ratio <= f:
+        return None
+    if fingerprint in _DRIFT_WARNED or len(_DRIFT_WARNED) >= 512:
+        return None
+    _DRIFT_WARNED.add(fingerprint)
+    profile = active_profile()
+    warnings.warn(
+        f"plan drift on {fingerprint}: measured {wall_s * 1e6:.0f}us vs "
+        f"predicted {predicted_us:.0f}us (x{ratio:.1f}, band x{f:.0f}) "
+        f"under calibration profile '{profile.fingerprint}' — consider "
+        f"`python -m benchmarks.calibrate` to re-measure this host",
+        CalibrationDriftWarning, stacklevel=3)
+    return ratio

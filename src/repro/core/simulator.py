@@ -91,7 +91,6 @@ import functools
 import os
 import time
 import types
-import warnings
 from typing import Dict, List, Sequence
 
 import jax
@@ -739,15 +738,16 @@ def group_engine_key(trace: Trace, configs: Sequence[HMSConfig]) -> _EngineKey:
     policy = policies.pop()
     replay = tsplit.replay_prefix()
     with obs.span("shard_plan", policy=policy, configs=len(cfgs)):
-        shards, t_seg = costmodel.choose_hms_split(
+        split = costmodel.plan_hms_split(
             lambda s: max(shard_depth(trace, c, s) for c in cfgs),
             len(cfgs), replay)
+        shards, t_seg = split.shards, split.t_segments
         plans = [shard_plan(trace, c, shards) for c in cfgs]
     depth = max(p["depth"] for p in plans)
     # a forced T may exceed the shard depth; segments need >= 1 core step
     t_seg = max(1, min(t_seg, depth))
     use_ctc = policy in _USES_CTC
-    return _EngineKey(
+    key = _EngineKey(
         policy=policy,
         n=trace.n,
         shards=shards,
@@ -763,6 +763,14 @@ def group_engine_key(trace: Trace, configs: Sequence[HMSConfig]) -> _EngineKey:
         t_segments=t_seg,
         replay=replay if t_seg > 1 else 0,
     )
+    _PLAN_BY_KEY[key] = split
+    return key
+
+
+# The planner decision behind each engine key (prediction + rejected
+# alternatives), kept for the ledger's plan-regret telemetry.  Bounded by
+# the same static-structure diversity as the jit caches.
+_PLAN_BY_KEY: Dict[_EngineKey, costmodel.SplitPlan] = {}
 
 
 def _fingerprint(key: _EngineKey, width: int) -> str:
@@ -779,7 +787,8 @@ def _obs_hms_record(entry: str, trace: Trace, key: _EngineKey, width: int,
                     compiled: bool, wall_s: float, digest: str,
                     rounds: int = 1, outcome=None,
                     cfgs: Sequence[HMSConfig] = (),
-                    lanes: Sequence[Dict[str, np.ndarray]] = ()) -> None:
+                    lanes: Sequence[Dict[str, np.ndarray]] = (),
+                    plan=None) -> None:
     """Build + emit one HMS ledger record (caller gates on obs.enabled()).
     ``key`` is the engine key that actually produced the counters (the
     degradation ladder may have descended from the planned one);
@@ -788,7 +797,10 @@ def _obs_hms_record(entry: str, trace: Trace, key: _EngineKey, width: int,
     raw counter dicts — recorded in full (schema 3) so the silver store
     gets model counters, not just the digest.  The config key hashes the
     config alone (no link mode): these are raw scan counters, upstream of
-    the UM-overflow term that makes ``nvlink`` matter."""
+    the UM-overflow term that makes ``nvlink`` matter.  ``plan`` is the
+    :class:`~repro.core.costmodel.SplitPlan` behind the *planned* shape
+    (schema 4: prediction + rejected alternatives ride the record even
+    when the ladder descended)."""
     obs.record(obs.RunRecord(
         entry=entry, engine="hms", trace=trace.name, n=trace.n,
         phases=key.phases, engine_key=_fingerprint(key, width),
@@ -804,25 +816,11 @@ def _obs_hms_record(entry: str, trace: Trace, key: _EngineKey, width: int,
         trace_fp=_sweepckpt.trace_fingerprint(trace),
         config_digests=[_sweepckpt.config_digest(c) for c in cfgs] or None,
         counters=[_sweepckpt.encode_counters(C) for C in lanes] or None,
+        plan_predicted_us=plan.predicted_us if plan is not None else None,
+        plan_alternatives=list(plan.alternatives) or None
+        if plan is not None else None,
+        calib_fingerprint=costmodel.active_profile().fingerprint,
         host=obs.host_metadata(), **obs.git_info()))
-
-
-def engine_cache_size() -> int:
-    """Deprecated: use ``obs.cache_stats()["hms_engines"]``."""
-    warnings.warn(
-        "simulator.engine_cache_size is deprecated; use "
-        "repro.obs.cache_stats()['hms_engines']",
-        DeprecationWarning, stacklevel=2)
-    return len(_ENGINE_CACHE)
-
-
-def clear_engine_cache() -> None:
-    """Deprecated: use ``obs.reset(um=False)``."""
-    warnings.warn(
-        "simulator.clear_engine_cache is deprecated; use "
-        "repro.obs.reset(um=False)",
-        DeprecationWarning, stacklevel=2)
-    obs.reset(um=False)
 
 
 def _counting(key: _EngineKey):
@@ -1048,12 +1046,16 @@ def _run_hms_scan(trace: Trace, cfg: HMSConfig, pre,
     t0 = time.perf_counter()
     (C, rounds, used, compiled), outcome = _guard.run_ladder("hms", rungs)
     wall = time.perf_counter() - t0
+    plan = _PLAN_BY_KEY.get(key)
     if outcome.rung != "reference":
         obs.engine_run(_fingerprint(used, 1), compiled)
+        if plan is not None and used == key:
+            costmodel.check_plan_drift(_fingerprint(used, 1),
+                                       plan.predicted_us, wall, compiled)
     if obs.enabled():
         _obs_hms_record(entry, trace, used, 1, compiled, wall,
                         obs.counter_digest(C), rounds, outcome,
-                        cfgs=[cfg], lanes=[C])
+                        cfgs=[cfg], lanes=[C], plan=plan)
     return C
 
 
@@ -1116,15 +1118,19 @@ def _run_hms_batch(trace: Trace, cfgs: Sequence[HMSConfig], key: _EngineKey,
     (Cs, rounds, used, compiled), outcome = _guard.run_ladder(
         "hms_batch", rungs, bisect=bisect if len(cfgs) > 1 else None)
     wall = time.perf_counter() - t0
+    plan = _PLAN_BY_KEY.get(key)
     if outcome.rung not in ("reference", "bisect"):
         obs.engine_run(_fingerprint(used, len(cfgs)), compiled)
+        if plan is not None and used == key:
+            costmodel.check_plan_drift(_fingerprint(used, len(cfgs)),
+                                       plan.predicted_us, wall, compiled)
     if obs.enabled():
         lanes = [{k: v[j] for k, v in Cs.items()}
                  for j in range(len(cfgs))]
         _obs_hms_record(
             entry, trace, used, len(cfgs), compiled, wall,
             obs.counter_digest(lanes), rounds, outcome,
-            cfgs=cfgs, lanes=lanes)
+            cfgs=cfgs, lanes=lanes, plan=plan)
     return Cs
 
 
@@ -1352,6 +1358,7 @@ def _single_tier_record(entry: str, trace: Trace, cfg: HMSConfig,
         trace_fp=_sweepckpt.trace_fingerprint(trace),
         config_digests=[_sweepckpt.config_digest(cfg)],
         counters=[_sweepckpt.encode_counters(C)],
+        calib_fingerprint=costmodel.active_profile().fingerprint,
         host=obs.host_metadata(), **obs.git_info()))
 
 

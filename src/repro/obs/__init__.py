@@ -66,6 +66,26 @@ def disable() -> None:
     _spans_set_enabled(False)
 
 
+def calibration() -> dict:
+    """The cost-model calibration state behind the planner right now:
+    mode (``off`` / ``auto`` / ``force``), this host's fingerprint, and
+    the active profile's identity + constants (see
+    ``repro.core.calibrate``).  Lazy import — the facade stays free of
+    module-level ``repro.core`` dependencies."""
+    import dataclasses as _dc
+
+    from repro.core import calibrate as _calibrate
+    from repro.core import costmodel as _costmodel
+
+    profile = _costmodel.active_profile()
+    return {
+        "mode": _costmodel.calib_mode(),
+        "host_fingerprint": _calibrate.host_fingerprint(),
+        "calib_dir": _calibrate.calib_dir(),
+        "profile": _dc.asdict(profile),
+    }
+
+
 # REPRO_OBS_DIR in the environment enables streaming for the whole process
 # — the benchmark CLIs (and anything else importing repro) inherit it.
 _env_dir = _os.environ.get("REPRO_OBS_DIR")
@@ -84,5 +104,5 @@ __all__ = [
     "cache_stats", "reset", "assert_no_retrace", "RetraceError",
     "engine_run", "engine_runs",
     # identity
-    "host_metadata", "git_info",
+    "host_metadata", "git_info", "calibration",
 ]

@@ -31,7 +31,12 @@ import numpy as np
 # per-lane model counters in full — not just the 16-hex digest — plus the
 # (trace fingerprint, per-lane config key) identity the silver store
 # (repro.obs.store) joins runs on.  Older ledgers load with them None.
-SCHEMA_VERSION = 3
+# 4: plan-regret telemetry (plan_predicted_us / plan_alternatives /
+# calib_fingerprint): the cost model's prediction for the chosen (S, T)
+# shape, the cheapest rejected shapes, and the calibration profile that
+# priced them — next to the measured wall, so planner accuracy is a
+# query over the ledger.  Older ledgers load with them None.
+SCHEMA_VERSION = 4
 
 
 def counter_digest(counters) -> str:
@@ -104,6 +109,14 @@ class RunRecord:
     trace_fp: Optional[str] = None
     config_digests: Optional[List[str]] = None
     counters: Optional[List[Dict[str, object]]] = None
+    # plan-regret telemetry (see repro.core.costmodel): modeled cost (us)
+    # of the (S, T) shape this run planned, the cheapest rejected
+    # alternatives ({"shards", "t_segments", "predicted_us"}, ascending),
+    # and the fingerprint of the calibration profile that priced them.
+    # None on pre-schema-4 records and on paths with nothing to plan.
+    plan_predicted_us: Optional[float] = None
+    plan_alternatives: Optional[List[Dict[str, object]]] = None
+    calib_fingerprint: Optional[str] = None
     # run identity
     git_sha: Optional[str] = None
     git_dirty: Optional[bool] = None

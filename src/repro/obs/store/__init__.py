@@ -14,9 +14,11 @@ answered by hand.  This package is that join:
   checks; re-ingesting a source is a no-op.
 * **Gold** (:mod:`.gold`) — materialized views over silver: Pareto
   frontiers on ``(runtime_cycles, dram+scm traffic, probe traffic)`` per
-  workload x policy, best-config-per-workload tables, and cross-PR
+  workload x policy, best-config-per-workload tables, cross-PR
   frontier diffs (which configs entered/left the frontier between two
-  git SHAs, per-axis deltas).
+  git SHAs, per-axis deltas), and the planner-accuracy view over the
+  schema-4 plan-telemetry table (predicted-vs-measured ratios, measured
+  regret, mis-plan table).
 * **Report** (:mod:`.report`) — renders the gold views to markdown and
   figures; ``python -m benchmarks.report`` is the CLI.
 
@@ -37,11 +39,19 @@ from .gold import (
     frontier_diff,
     frontier_view,
     pareto,
+    planner_view,
 )
-from .report import render_diff_markdown, render_figures, render_markdown
+from .report import (
+    render_diff_markdown,
+    render_figures,
+    render_markdown,
+    render_planner_figure,
+    render_planner_markdown,
+)
 from .silver import (
     SILVER_SCHEMA_VERSION,
     IngestStats,
+    PlanRow,
     SilverRow,
     SilverStore,
     counter_totals,
@@ -52,11 +62,13 @@ from .silver import (
 
 __all__ = [
     # silver
-    "SILVER_SCHEMA_VERSION", "SilverRow", "SilverStore", "IngestStats",
-    "counter_totals", "derive_metrics", "host_id", "default_store_dir",
+    "SILVER_SCHEMA_VERSION", "SilverRow", "PlanRow", "SilverStore",
+    "IngestStats", "counter_totals", "derive_metrics", "host_id",
+    "default_store_dir",
     # gold
     "AXES", "FrontierPoint", "FrontierDiff", "pareto", "frontier_view",
-    "best_configs", "frontier_diff",
+    "best_configs", "frontier_diff", "planner_view",
     # report
     "render_markdown", "render_diff_markdown", "render_figures",
+    "render_planner_markdown", "render_planner_figure",
 ]

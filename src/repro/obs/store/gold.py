@@ -15,6 +15,10 @@ bit-identical frontiers, tables, and diffs.
   entered/left each frontier between two row sets (typically two git
   SHAs of the same sweep), with per-axis deltas for configs present in
   both.  A store diffed against itself is empty by construction.
+* :func:`planner_view` — planner accuracy over the plan-telemetry table:
+  predicted-vs-measured ratio distribution, per-group measured regret,
+  and the mis-plan table naming engine keys where a rejected (S, T)
+  shape measured faster than the shape the cost model preferred.
 """
 
 from __future__ import annotations
@@ -22,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
-from .silver import SilverRow
+from .silver import PlanRow, SilverRow
 
 # Pareto axes, all minimized.  Bit-derived from model counters (traffic,
 # probe) and the deterministic timing model (runtime).
@@ -210,3 +214,116 @@ def frontier_diff(rows_old: Sequence[SilverRow],
     return FrontierDiff(sha_old=_shas(rows_old), sha_new=_shas(rows_new),
                         entered=entered, left=left, changed=changed,
                         regressions=regressions)
+
+
+# ---------------------------------------------------------------------------
+# Planner accuracy: predicted-vs-measured over the plan-telemetry table.
+# ---------------------------------------------------------------------------
+
+#: a planner-preferred shape must be this much slower than the measured
+#: best before the group counts as a mis-plan (timer noise guard)
+MISPLAN_SLACK = 1.05
+
+
+def _percentile(sorted_vals: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile of an ascending list (deterministic, no
+    interpolation surprises across numpy versions)."""
+    i = int(round(q * (len(sorted_vals) - 1)))
+    return sorted_vals[min(len(sorted_vals) - 1, max(0, i))]
+
+
+def planner_view(plan_rows: Sequence[PlanRow]) -> Dict[str, object]:
+    """Planner accuracy over plan-telemetry rows, as a plain dict.
+
+    * ``ratio`` — distribution of measured-wall / predicted-cost over warm
+      (non-compile) invocations: the cost model's absolute scale error.
+      A tight band means the profile describes the host; a wide one is
+      the drift the calibrate CLI exists to fix.
+    * ``regret`` — for every (engine, workload, n, batch, host) group
+      observed at two or more (S, T) shapes: the measured wall of the
+      shape the cost model *prefers* (min predicted) minus the measured
+      best — 0 when the planner picked the fastest shape seen.
+    * ``misplans`` — the groups where a rejected shape measured faster
+      than the preferred one by more than :data:`MISPLAN_SLACK`, naming
+      both engine keys.
+    * ``scatter`` — (predicted_us, wall_us) warm points for the
+      predicted-vs-measured figure.
+
+    Pure function, deterministic ordering, like every gold view.
+    """
+    warm = [r for r in plan_rows
+            if not r.compiled and r.predicted_us and r.predicted_us > 0
+            and r.wall_s and r.wall_s > 0]
+    ratios = sorted(r.wall_s * 1e6 / r.predicted_us for r in warm)
+    scatter = sorted(
+        ({"engine": r.engine, "engine_key": r.engine_key,
+          "workload": r.workload, "predicted_us": r.predicted_us,
+          "wall_us": r.wall_s * 1e6,
+          "calib_fingerprint": r.calib_fingerprint}
+         for r in warm),
+        key=lambda d: (d["engine"], d["engine_key"], d["predicted_us"],
+                       d["wall_us"]))
+
+    # fastest observation per (group, shape); groups seen at >= 2 shapes
+    # are the only places measured regret is observable
+    groups: Dict[Tuple, Dict[Tuple[int, int], PlanRow]] = {}
+    for r in warm:
+        shape = (int(r.shards or 1), int(r.t_segments or 1))
+        g = groups.setdefault((r.engine, r.workload, r.n, r.batch,
+                               r.host_id), {})
+        cur = g.get(shape)
+        if cur is None or r.wall_s < cur.wall_s:
+            g[shape] = r
+
+    regret: List[Dict[str, object]] = []
+    misplans: List[Dict[str, object]] = []
+    multi_shape_groups = 0
+    for gk in sorted(groups):
+        shapes = groups[gk]
+        if len(shapes) < 2:
+            continue
+        multi_shape_groups += 1
+        pref = min(shapes, key=lambda s: (shapes[s].predicted_us, s))
+        best = min(shapes, key=lambda s: (shapes[s].wall_s, s))
+        regret_us = (shapes[pref].wall_s - shapes[best].wall_s) * 1e6
+        engine, workload, n, batch, hid = gk
+        entry = {
+            "engine": engine, "workload": workload, "n": n,
+            "batch": batch, "host_id": hid,
+            "preferred": {"shards": pref[0], "t_segments": pref[1],
+                          "engine_key": shapes[pref].engine_key,
+                          "predicted_us": shapes[pref].predicted_us,
+                          "wall_us": shapes[pref].wall_s * 1e6},
+            "best": {"shards": best[0], "t_segments": best[1],
+                     "engine_key": shapes[best].engine_key,
+                     "predicted_us": shapes[best].predicted_us,
+                     "wall_us": shapes[best].wall_s * 1e6},
+            "regret_us": regret_us,
+            "shapes_seen": len(shapes),
+        }
+        regret.append(entry)
+        if pref != best and shapes[pref].wall_s \
+                > shapes[best].wall_s * MISPLAN_SLACK:
+            misplans.append(entry)
+
+    view: Dict[str, object] = {
+        "records": len(list(plan_rows)),
+        "warm": len(warm),
+        "profiles": sorted({r.calib_fingerprint or "unknown"
+                            for r in plan_rows}),
+        "ratio": None,
+        "groups": multi_shape_groups,
+        "regret": regret,
+        "misplans": misplans,
+        "scatter": scatter,
+    }
+    if ratios:
+        view["ratio"] = {
+            "n": len(ratios),
+            "min": ratios[0],
+            "p10": _percentile(ratios, 0.10),
+            "median": _percentile(ratios, 0.50),
+            "p90": _percentile(ratios, 0.90),
+            "max": ratios[-1],
+        }
+    return view

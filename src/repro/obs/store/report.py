@@ -13,8 +13,8 @@ import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .gold import (AXES, FrontierDiff, FrontierPoint, best_configs,
-                   frontier_view)
-from .silver import SilverRow, SilverStore
+                   frontier_view, planner_view)
+from .silver import PlanRow, SilverRow, SilverStore
 
 _AXIS_LABEL = {
     "runtime_cycles": "runtime (cycles)",
@@ -91,9 +91,64 @@ def render_markdown(store: SilverStore,
                  *[_fmt(p.axes[a]) for a in axes]]) + " |")
         out.append("")
 
+    plans = store.plan_rows()
+    if plans:
+        out += render_planner_markdown(planner_view(plans))
+
     if diff is not None:
         out += render_diff_markdown(diff)
     return "\n".join(out)
+
+
+def render_planner_markdown(view: Dict[str, object]) -> List[str]:
+    """The planner-accuracy section (see ``gold.planner_view``) as
+    markdown lines: prediction-scale distribution, measured plan regret,
+    and the mis-plan table."""
+    out = ["## Planner accuracy", ""]
+    profiles = ", ".join(f"`{p}`" for p in view["profiles"]) or "—"
+    out.append(f"- plan records: **{view['records']}** "
+               f"({view['warm']} warm) under profile(s) {profiles}")
+    ratio = view["ratio"]
+    if ratio:
+        out.append(
+            f"- measured wall / predicted cost (warm): median "
+            f"**{ratio['median']:.2f}x**, p10 {ratio['p10']:.2f}x, "
+            f"p90 {ratio['p90']:.2f}x, range "
+            f"[{ratio['min']:.2f}x, {ratio['max']:.2f}x] "
+            f"over {ratio['n']} runs")
+    out.append(f"- groups observed at ≥ 2 (S, T) shapes: "
+               f"**{view['groups']}** — mis-planned: "
+               f"**{len(view['misplans'])}**")
+    out.append("")
+    regret = view["regret"]
+    if regret:
+        zero = sum(1 for e in regret if e["regret_us"] <= 0.0)
+        worst = max(e["regret_us"] for e in regret)
+        out.append(f"- measured regret: {zero}/{len(regret)} groups picked "
+                   f"the fastest shape seen; worst regret "
+                   f"{worst / 1e3:.2f} ms")
+        out.append("")
+    if view["misplans"]:
+        out.append("| engine | workload | n | batch | preferred (S,T) | "
+                   "faster (S,T) | regret | preferred key | faster key |")
+        out.append("|" + "---|" * 9)
+        for e in view["misplans"]:
+            p, b = e["preferred"], e["best"]
+            out.append(
+                f"| {e['engine']} | {e['workload']} | {e['n']} "
+                f"| {e['batch']} "
+                f"| S{p['shards']}T{p['t_segments']} "
+                f"({p['wall_us'] / 1e3:.2f} ms) "
+                f"| S{b['shards']}T{b['t_segments']} "
+                f"({b['wall_us'] / 1e3:.2f} ms) "
+                f"| {e['regret_us'] / 1e3:.2f} ms "
+                f"| `{p['engine_key']}` | `{b['engine_key']}` |")
+        out.append("")
+    elif regret:
+        out.append("_No mis-plans: every multi-shape group's preferred "
+                   "shape measured fastest (within slack)._")
+        out.append("")
+    return out
 
 
 def render_diff_markdown(diff: FrontierDiff) -> List[str]:
@@ -200,3 +255,53 @@ def render_figures(rows: Sequence[SilverRow], out_dir: str,
         plt.close(fig)
         paths.append(path)
     return paths
+
+
+def render_planner_figure(plan_rows: Sequence[PlanRow],
+                          out_dir: str) -> Optional[str]:
+    """Predicted-vs-measured scatter (log-log, one color per engine, the
+    y = x perfect-prediction line dashed) from the plan-telemetry table.
+    Returns the PNG path, or None without matplotlib / warm points."""
+    view = planner_view(plan_rows)
+    scatter = view["scatter"]
+    if not scatter:
+        return None
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except Exception:
+        return None
+
+    palette = {"hms": "#2a78d6", "um": "#eb6834"}
+    os.makedirs(out_dir, exist_ok=True)
+    fig, ax = plt.subplots(figsize=(5.2, 3.6), dpi=150)
+    ax.grid(True, color="#e5e4df", linewidth=0.8, zorder=0)
+    for side in ("top", "right"):
+        ax.spines[side].set_visible(False)
+    for engine in sorted({d["engine"] for d in scatter}):
+        pts = [d for d in scatter if d["engine"] == engine]
+        ax.scatter([d["predicted_us"] for d in pts],
+                   [d["wall_us"] for d in pts],
+                   s=14, alpha=0.75, zorder=3,
+                   color=palette.get(engine, "#1baf7a"), label=engine)
+    lo = min(min(d["predicted_us"] for d in scatter),
+             min(d["wall_us"] for d in scatter))
+    hi = max(max(d["predicted_us"] for d in scatter),
+             max(d["wall_us"] for d in scatter))
+    ax.plot([lo, hi], [lo, hi], color="#b5b4af", linewidth=1.0,
+            linestyle="--", zorder=2, label="wall = predicted")
+    ax.set_xscale("log")
+    ax.set_yscale("log")
+    ax.set_xlabel("predicted plan cost (us)", color="#3d3d38")
+    ax.set_ylabel("measured wall (us)", color="#3d3d38")
+    ratio = view["ratio"]
+    sub = f" (median {ratio['median']:.2f}x)" if ratio else ""
+    ax.set_title(f"Planner accuracy — predicted vs measured{sub}",
+                 fontsize=10, loc="left", color="#1a1a19")
+    ax.legend(fontsize=7, frameon=False)
+    path = os.path.join(out_dir, "planner_accuracy.png")
+    fig.tight_layout()
+    fig.savefig(path)
+    plt.close(fig)
+    return path

@@ -31,6 +31,13 @@ Persistence is append-only JSONL (``silver.jsonl`` under the store dir,
 default from ``REPRO_STORE_DIR``); merged rows append a superseding line
 and the load path replays lines through the same merge logic, so the
 in-memory index converges to the same state in any replay order.
+
+Next to the counter rows, silver keeps a second table of
+:class:`PlanRow` — the schema-4 plan-regret telemetry (predicted cost of
+the chosen (S, T), the cheapest rejected alternatives, measured wall,
+calibration fingerprint) per engine invocation — which the gold layer's
+planner-accuracy view is computed over.  Plan rows are host-dependent by
+nature, so they dedupe on invocation identity and never merge.
 """
 
 from __future__ import annotations
@@ -140,6 +147,55 @@ class SilverRow:
         return cls(**{k: v for k, v in d.items() if k in names})
 
 
+@dataclasses.dataclass
+class PlanRow:
+    """One engine invocation's plan-regret telemetry (schema-4 ledger
+    fields, normalized): what the cost model predicted for the shape it
+    chose, what it predicted for the cheapest rejected shapes, and what
+    the run actually measured."""
+
+    engine: str                    # "hms" | "um"
+    engine_key: str                # fingerprint of the planned shape
+    workload: str                  # trace name
+    n: int
+    batch: int
+    shards: Optional[int]
+    t_segments: Optional[int]
+    predicted_us: float
+    alternatives: List[Dict[str, object]]   # ascending predicted cost
+    wall_s: float
+    compiled: bool
+    ladder_rung: Optional[str]
+    calib_fingerprint: Optional[str]
+    git_sha: str
+    host_id: str
+    ts: float = 0.0
+    schema: int = SILVER_SCHEMA_VERSION
+
+    @property
+    def key(self) -> str:
+        """Invocation identity: same record ingested twice is one row."""
+        blob = json.dumps([self.engine_key, self.git_sha, self.host_id,
+                           self.ts, self.wall_s], sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    @property
+    def best_alternative_us(self) -> Optional[float]:
+        alts = [a.get("predicted_us") for a in self.alternatives
+                if a.get("predicted_us") is not None]
+        return min(alts) if alts else None
+
+    def to_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["table"] = "plan"
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, object]) -> "PlanRow":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+
 def _counters_compatible(a: Mapping[str, object],
                          b: Mapping[str, object]) -> bool:
     """Shared counter keys must agree on whole-trace totals bit-for-bit."""
@@ -189,6 +245,7 @@ class SilverStore:
         self.dir = None if path is None else str(path)
         self.path = None
         self._rows: Dict[Tuple[str, str, str, str], SilverRow] = {}
+        self._plans: Dict[str, PlanRow] = {}
         self._stream = None
         if self.dir is not None:
             os.makedirs(self.dir, exist_ok=True)
@@ -205,7 +262,12 @@ class SilverStore:
                 if not line:
                     continue
                 try:
-                    row = SilverRow.from_dict(json.loads(line))
+                    d = json.loads(line)
+                    if d.get("table") == "plan":
+                        self._absorb_plan(PlanRow.from_dict(d),
+                                          persist=False)
+                        continue
+                    row = SilverRow.from_dict(d)
                 except (ValueError, TypeError):
                     bad += 1        # torn tail from a killed writer
                     continue
@@ -221,8 +283,25 @@ class SilverStore:
         """Snapshot of all rows, in deterministic key order."""
         return [self._rows[k] for k in sorted(self._rows)]
 
+    def plan_rows(self) -> List[PlanRow]:
+        """Snapshot of the plan-telemetry table, in deterministic order."""
+        return [self._plans[k] for k in sorted(self._plans)]
+
     def __len__(self) -> int:
         return len(self._rows)
+
+    def _absorb_plan(self, row: PlanRow, persist: bool = True) -> str:
+        """Add one plan row; returns 'added' | 'dup' (plans never merge:
+        two invocations are two observations, one record twice is one)."""
+        k = row.key
+        if k in self._plans:
+            return "dup"
+        self._plans[k] = row
+        if persist and self._stream is not None:
+            self._stream.write(json.dumps(row.to_dict(), default=float)
+                               + "\n")
+            self._stream.flush()
+        return "added"
 
     def _absorb(self, row: SilverRow, persist: bool = True) -> str:
         """Add/merge one row; returns 'added' | 'merged' | 'dup' |
@@ -306,12 +385,25 @@ class SilverStore:
     def ingest_ledger(self, path: str) -> IngestStats:
         """One row per vmap lane of every schema-3 run record (older
         records, and records from paths that predate full-counter
-        emission, are counted as skipped)."""
+        emission, are counted as skipped), plus one :class:`PlanRow` per
+        schema-4 record that carried plan-regret telemetry."""
         from repro.obs.ledger import load_ledger
 
         stats = IngestStats(source=f"ledger:{os.path.basename(path)}")
         src = f"ledger:{os.path.abspath(path)}"
         for rec in load_ledger(path):
+            if rec.plan_predicted_us is not None:
+                self._tally(stats, self._absorb_plan(PlanRow(
+                    engine=rec.engine, engine_key=rec.engine_key,
+                    workload=rec.trace, n=rec.n, batch=rec.batch,
+                    shards=rec.shards, t_segments=rec.t_segments,
+                    predicted_us=rec.plan_predicted_us,
+                    alternatives=list(rec.plan_alternatives or []),
+                    wall_s=rec.wall_s, compiled=rec.compiled,
+                    ladder_rung=rec.ladder_rung,
+                    calib_fingerprint=rec.calib_fingerprint,
+                    git_sha=rec.git_sha or "unknown",
+                    host_id=host_id(rec.host), ts=rec.ts)))
             if not (rec.trace_fp and rec.config_digests and rec.counters):
                 stats.skipped += 1
                 continue
@@ -450,6 +542,7 @@ class SilverStore:
         rows = self.rows()
         return {
             "rows": len(rows),
+            "plan_rows": len(self._plans),
             "workloads": sorted({r.workload for r in rows}),
             "engines": sorted({r.engine for r in rows}),
             "git_shas": sorted({r.git_sha for r in rows}),

@@ -10,30 +10,24 @@ through the same scan.  The seed formulation is frozen in
 it on all four outputs (faults / migrated pages / writeback pages / remote
 columns) in both link modes.
 
-Cache accounting lives in the ``repro.obs`` facade now:
-``obs.cache_stats()`` / ``obs.reset(hms=False, ...)`` replace the
-deprecated ``um_engine_cache_size`` / ``um_lanes_run`` /
-``clear_um_caches`` / ``clear_um_results`` shims kept below, and every
-``simulate_um_many`` call emits a ledger :class:`repro.obs.RunRecord`
-with its lane dedupe accounting when observability is enabled.
+Cache accounting lives in the ``repro.obs`` facade:
+``obs.cache_stats()`` / ``obs.reset(hms=False, ...)`` (the PR 6
+deprecation shims are gone), and every ``simulate_um_many`` call emits a
+ledger :class:`repro.obs.RunRecord` with its lane dedupe accounting when
+observability is enabled.
 """
 
 from .engine import (
     UMResult,
     UMSpec,
-    clear_um_caches,
-    clear_um_results,
     simulate_um,
     simulate_um_many,
-    um_engine_cache_size,
     um_engine_trace_count,
     um_group_key,
-    um_lanes_run,
     um_spec,
 )
 
 __all__ = [
     "UMResult", "UMSpec", "um_spec", "simulate_um", "simulate_um_many",
-    "um_group_key", "um_engine_cache_size", "um_engine_trace_count",
-    "um_lanes_run", "clear_um_caches", "clear_um_results",
+    "um_group_key", "um_engine_trace_count",
 ]

@@ -63,7 +63,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 import weakref
 from typing import Dict, List, Sequence
 
@@ -377,43 +376,6 @@ def um_engine_trace_count(key: _UMKey) -> int:
     return _UM_TRACE_COUNTS.get(key, 0)
 
 
-# -- deprecated shims (PR 6): the obs facade owns this accounting now ------
-
-def um_engine_cache_size() -> int:
-    """Deprecated: use ``obs.cache_stats()["um_engines"]``."""
-    warnings.warn(
-        "um_engine_cache_size() is deprecated; use "
-        "repro.obs.cache_stats()['um_engines']",
-        DeprecationWarning, stacklevel=2)
-    return len(_UM_ENGINE_CACHE)
-
-
-def um_lanes_run() -> int:
-    """Deprecated: use ``obs.cache_stats()["um_lanes_run"]``."""
-    warnings.warn(
-        "um_lanes_run() is deprecated; use "
-        "repro.obs.cache_stats()['um_lanes_run']",
-        DeprecationWarning, stacklevel=2)
-    return _LANES_RUN
-
-
-def clear_um_results() -> None:
-    """Deprecated: use ``obs.reset(hms=False, keep_compiled=True)``."""
-    warnings.warn(
-        "clear_um_results() is deprecated; use "
-        "repro.obs.reset(hms=False, keep_compiled=True)",
-        DeprecationWarning, stacklevel=2)
-    obs.reset(hms=False, keep_compiled=True)
-
-
-def clear_um_caches() -> None:
-    """Deprecated: use ``obs.reset(hms=False)``."""
-    warnings.warn(
-        "clear_um_caches() is deprecated; use repro.obs.reset(hms=False)",
-        DeprecationWarning, stacklevel=2)
-    obs.reset(hms=False)
-
-
 def _engine_for(key: _UMKey):
     if key not in _UM_ENGINE_CACHE:
         base = _make_um_engine(key)
@@ -620,8 +582,10 @@ def simulate_um_many(trace: Trace, specs: Sequence[UMSpec]) -> List[UMResult]:
     compiled = False
     t_rounds = None
     outcome = None
+    plan = None
     if run_specs:
-        t_seg = costmodel.choose_um_split(trace.n, len(run_specs))
+        plan = costmodel.plan_um_split(trace.n, len(run_specs))
+        t_seg = plan.t_segments
         replay = tsplit.replay_prefix() if t_seg > 1 else 0
         key = um_group_key(trace, run_specs, t_seg, replay)
         if n_ph > 1:
@@ -687,6 +651,10 @@ def simulate_um_many(trace: Trace, specs: Sequence[UMSpec]) -> List[UMResult]:
             "um", rungs, bisect=bisect if len(run_specs) > 1 else None)
         if outcome.rung not in ("reference", "bisect"):
             obs.engine_run(_fingerprint(key, len(run_specs)), compiled)
+            if key.t_segments == plan.t_segments:
+                costmodel.check_plan_drift(
+                    _fingerprint(key, len(run_specs)), plan.predicted_us,
+                    time.perf_counter() - t_start, compiled)
         _LANES_RUN += len(run_specs)
         for j, s in enumerate(run_specs):
             cache[s] = UMResult(
@@ -733,6 +701,11 @@ def simulate_um_many(trace: Trace, specs: Sequence[UMSpec]) -> List[UMResult]:
             retries=outcome.retries if outcome is not None else None,
             degradations=(outcome.events or None)
             if outcome is not None else None,
+            plan_predicted_us=plan.predicted_us
+            if plan is not None else None,
+            plan_alternatives=list(plan.alternatives) or None
+            if plan is not None else None,
+            calib_fingerprint=costmodel.active_profile().fingerprint,
             host=obs.host_metadata(), **obs.git_info()))
     return out
 

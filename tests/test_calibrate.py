@@ -1,0 +1,374 @@
+"""Self-calibrating cost model: profiles, planning, and plan-regret
+telemetry.
+
+The contracts under test:
+
+  * a :class:`CalibProfile` round-trips bitwise through its JSON file —
+    a saved profile plans identically to the in-memory one forever,
+  * planning is a deterministic function of the active profile; a skewed
+    profile changes the chosen (S, T) shape but never the model counters
+    (the engines' parity guarantees make digests profile-independent),
+  * ``REPRO_CALIB=off`` reproduces the committed-default plans exactly,
+    even with a per-host profile sitting on disk; a corrupt profile file
+    degrades to defaults instead of breaking the planner,
+  * every schema-4 ledger record carries ``plan_predicted_us`` /
+    ``plan_alternatives`` / ``calib_fingerprint`` next to the measured
+    wall; schema-2/3 records still parse (plan fields None),
+  * the drift sentinel warns — once per engine fingerprint, never on
+    compile calls, never failing — when measured wall leaves the
+    prediction band,
+  * the silver store ingests plan telemetry as a dedicated table with
+    re-ingest-is-a-no-op dedup, and the gold ``planner_view`` /
+    markdown report surface regret and mis-plans from it.
+"""
+
+import dataclasses
+import json
+import math
+
+import pytest
+
+from repro import obs
+from repro.core import HMSConfig, calibrate, costmodel, make_trace, simulate
+from repro.core.costmodel import CalibProfile, DEFAULT_PROFILE, SplitPlan
+from repro.obs.ledger import RunRecord
+from repro.obs.store import (PlanRow, SilverStore, planner_view,
+                             render_markdown, render_planner_markdown)
+from repro.um import UMSpec, simulate_um_many
+
+
+@pytest.fixture(autouse=True)
+def _isolated_calibration(monkeypatch, tmp_path):
+    """Every test in this module sees an empty calibration dir and a
+    fresh (unresolved) profile; state is restored afterwards so the rest
+    of the suite keeps planning with whatever the environment says."""
+    monkeypatch.setenv("REPRO_CALIB_DIR", str(tmp_path / "calib"))
+    monkeypatch.delenv("REPRO_CALIB", raising=False)
+    costmodel.set_profile(None)
+    costmodel.set_calib_mode(None)
+    yield
+    costmodel.set_profile(None)
+    costmodel.set_calib_mode(None)
+    costmodel.set_drift_factor(None)
+
+
+def _skewed(**kw) -> CalibProfile:
+    """A deliberately wrong profile: parallel lanes priced absurdly high,
+    so the planner prefers the sequential-most shapes."""
+    base = dict(step_cost_solo=19.0, step_overhead=1e6, lane_cost=1e6,
+                um_step_cost_solo=30.0, um_step_overhead=1e6,
+                um_lane_cost=1e6, rounds_base=2.0, rounds_slope=0.25,
+                fingerprint="skewed-test", source="measured",
+                created_ts=1.0)
+    base.update(kw)
+    return CalibProfile(**base)
+
+
+# ---------------------------------------------------------------------------
+# Profile persistence.
+# ---------------------------------------------------------------------------
+
+def test_profile_json_roundtrip_bitwise():
+    """Awkward floats (repr round-trip is the guarantee json gives float64)
+    must survive save/load with every bit intact."""
+    p = CalibProfile(step_cost_solo=19.000000000000004,
+                     step_overhead=1.0 / 3.0,
+                     lane_cost=math.pi * 1e-7,
+                     um_step_cost_solo=2.0 ** -40,
+                     um_step_overhead=0.1 + 0.2,
+                     um_lane_cost=1e300,
+                     rounds_base=2.0000000000000004,
+                     rounds_slope=5e-324,
+                     fingerprint="abcdef012345", source="measured",
+                     created_ts=1765432109.876543)
+    q = calibrate.profile_from_json(calibrate.profile_to_json(p))
+    assert dataclasses.astuple(q) == dataclasses.astuple(p)
+
+
+def test_save_load_host_profile(tmp_path):
+    p = _skewed(fingerprint=calibrate.host_fingerprint())
+    path = calibrate.save_profile(p, str(tmp_path))
+    assert path.endswith(f"calib_{p.fingerprint}.json")
+    assert calibrate.load_profile(path) == p
+    assert calibrate.load_host_profile(str(tmp_path)) == p
+
+
+def test_corrupt_profile_degrades_to_default(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CALIB_DIR", str(tmp_path))
+    path = calibrate.profile_path(directory=str(tmp_path))
+    with open(path, "w") as f:
+        f.write("{not json")
+    assert calibrate.load_host_profile(str(tmp_path)) is None
+    costmodel.set_calib_mode("auto")
+    assert costmodel.active_profile() == DEFAULT_PROFILE
+
+
+def test_default_profile_is_the_committed_constants():
+    assert DEFAULT_PROFILE.step_cost_solo == costmodel.STEP_COST_SOLO
+    assert DEFAULT_PROFILE.um_lane_cost == costmodel.UM_LANE_COST
+    assert DEFAULT_PROFILE.rounds_base == costmodel.ROUNDS_BASE
+    assert DEFAULT_PROFILE.fingerprint == "default"
+    assert DEFAULT_PROFILE.source == "default"
+
+
+# ---------------------------------------------------------------------------
+# Mode resolution and planning determinism.
+# ---------------------------------------------------------------------------
+
+def test_calib_off_ignores_host_profile(tmp_path, monkeypatch):
+    """off = committed defaults, byte-for-byte today's plans, even with a
+    measured profile on disk; auto picks the same file up."""
+    monkeypatch.setenv("REPRO_CALIB_DIR", str(tmp_path))
+    calibrate.save_profile(_skewed(fingerprint=calibrate.host_fingerprint()),
+                           str(tmp_path))
+    costmodel.set_calib_mode("auto")
+    assert costmodel.active_profile().source == "measured"
+    costmodel.set_calib_mode("off")
+    assert costmodel.active_profile() is DEFAULT_PROFILE
+    depth_of = lambda s: -(-4000 // s)                      # noqa: E731
+    plan = costmodel.plan_hms_split(depth_of, 1)
+    assert costmodel.choose_hms_split(depth_of, 1) == \
+        (plan.shards, plan.t_segments)
+
+
+def test_planning_is_deterministic_under_pinned_profile():
+    costmodel.set_profile(_skewed())
+    depth_of = lambda s: -(-6000 // s)                      # noqa: E731
+    a = costmodel.plan_hms_split(depth_of, 2)
+    b = costmodel.plan_hms_split(depth_of, 2)
+    assert a == b
+    assert costmodel.plan_um_split(6000, 4) == \
+        costmodel.plan_um_split(6000, 4)
+
+
+def test_skewed_profile_changes_plan():
+    depth_of = lambda s: -(-8000 // s)                      # noqa: E731
+    costmodel.set_calib_mode("off")
+    default_plan = costmodel.plan_hms_split(depth_of, 1)
+    costmodel.set_profile(_skewed())
+    skewed_plan = costmodel.plan_hms_split(depth_of, 1)
+    assert default_plan.shards > 1          # defaults like parallel lanes
+    assert skewed_plan.shards == 1          # skew prices lanes off the table
+    assert (default_plan.shards, default_plan.t_segments) != \
+        (skewed_plan.shards, skewed_plan.t_segments)
+
+
+def test_plan_carries_prediction_and_alternatives():
+    costmodel.set_calib_mode("off")
+    plan = costmodel.plan_hms_split(lambda s: -(-4000 // s), 1)
+    assert isinstance(plan, SplitPlan)
+    assert plan.predicted_us > 0 and not plan.forced
+    assert plan.alternatives, "rejected candidates must be kept"
+    costs = [a["predicted_us"] for a in plan.alternatives]
+    assert costs == sorted(costs)
+    assert plan.best_alternative_us == costs[0]
+    assert plan.best_alternative_us >= plan.predicted_us * 0.95
+    # forced shapes are priced but carry no alternatives
+    old_s = costmodel.set_forced_shards(2)
+    old_t = costmodel.set_forced_tsplit(2)
+    try:
+        forced = costmodel.plan_hms_split(lambda s: -(-4000 // s), 1)
+    finally:
+        costmodel.set_forced_shards(old_s)
+        costmodel.set_forced_tsplit(old_t)
+    assert forced.forced and forced.alternatives == ()
+
+
+def test_counters_bit_identical_across_profiles():
+    """The whole point of profile safety: calibration may change which
+    (S, T) shape runs, never what it computes."""
+    t = make_trace("bfs_tu", n=4000)
+    cfg = HMSConfig(footprint=t.footprint)
+    costmodel.set_calib_mode("off")
+    base = obs.counter_digest(simulate(t, cfg).counters)
+    costmodel.set_profile(_skewed())
+    assert obs.counter_digest(simulate(t, cfg).counters) == base
+
+
+# ---------------------------------------------------------------------------
+# Ledger schema 4: plan-regret telemetry on every engine invocation.
+# ---------------------------------------------------------------------------
+
+def test_runrecord_schema4_roundtrip_and_backcompat():
+    rec = RunRecord(entry="simulate", engine="hms", trace="t", n=10,
+                    phases=1, engine_key="hms:k", compiled=True,
+                    wall_s=0.5, batch=1, counter_digest="0" * 16,
+                    plan_predicted_us=123.5,
+                    plan_alternatives=[{"shards": 2, "t_segments": 1,
+                                        "predicted_us": 130.0}],
+                    calib_fingerprint="default")
+    rt = RunRecord.from_dict(json.loads(json.dumps(rec.to_dict())))
+    assert rt.plan_predicted_us == 123.5
+    assert rt.plan_alternatives[0]["predicted_us"] == 130.0
+    assert rt.calib_fingerprint == "default"
+    # schema-2/3 dicts (no plan fields) parse with plan fields None
+    old = rec.to_dict()
+    for k in ("plan_predicted_us", "plan_alternatives",
+              "calib_fingerprint"):
+        del old[k]
+    old["schema"] = 3
+    legacy = RunRecord.from_dict(old)
+    assert legacy.plan_predicted_us is None
+    assert legacy.calib_fingerprint is None
+
+
+def test_ledger_records_carry_plan_telemetry(tmp_path):
+    costmodel.set_calib_mode("off")
+    obs.clear_records()
+    obs.enable(str(tmp_path))
+    try:
+        t = make_trace("stencil", n=3000)
+        simulate(t, HMSConfig(footprint=t.footprint))
+        simulate_um_many(t, [UMSpec(n_frames=32, chunk=4),
+                             UMSpec(n_frames=48, chunk=4)])
+        recs = obs.records()
+    finally:
+        obs.disable()
+    hms = [r for r in recs if r.engine == "hms"]
+    ums = [r for r in recs if r.engine == "um"]
+    assert hms and ums
+    for r in hms + ums:
+        assert r.calib_fingerprint == "default"
+        assert r.plan_predicted_us and r.plan_predicted_us > 0
+        for alt in r.plan_alternatives or []:
+            assert set(alt) == {"shards", "t_segments", "predicted_us"}
+
+
+# ---------------------------------------------------------------------------
+# Drift sentinel: warns, never fails, once per fingerprint.
+# ---------------------------------------------------------------------------
+
+def test_drift_sentinel_warns_once_per_fingerprint():
+    costmodel.set_calib_mode("off")
+    costmodel.set_drift_factor(10.0)
+    with pytest.warns(costmodel.CalibrationDriftWarning):
+        ratio = costmodel.check_plan_drift("hms:drift-a", 100.0, 0.1)
+    assert ratio == pytest.approx(1000.0)   # 0.1 s vs 100 us
+    # same fingerprint again: rate-limited, silent
+    assert costmodel.check_plan_drift("hms:drift-a", 100.0, 0.1) is None
+
+
+def test_drift_sentinel_exclusions():
+    costmodel.set_drift_factor(10.0)
+    # compile calls are excluded — tracing wall swamps the scan
+    assert costmodel.check_plan_drift("hms:drift-b", 100.0, 0.1,
+                                      compiled=True) is None
+    # inside the band: quiet (ratio 2x under factor 10)
+    assert costmodel.check_plan_drift("hms:drift-c", 100.0, 2e-4) is None
+    # nothing predicted: nothing to compare
+    assert costmodel.check_plan_drift("hms:drift-d", None, 0.1) is None
+    assert costmodel.check_plan_drift("hms:drift-e", 0.0, 0.1) is None
+
+
+# ---------------------------------------------------------------------------
+# Silver plan table -> gold planner view -> markdown.
+# ---------------------------------------------------------------------------
+
+def _plan_row(shape, predicted, wall_us, engine="hms", workload="w",
+              **kw):
+    s, t = shape
+    base = dict(engine=engine, engine_key=f"{engine}:k:{s}x{t}",
+                workload=workload, n=1000, batch=1, shards=s,
+                t_segments=t, predicted_us=float(predicted),
+                alternatives=[], wall_s=wall_us / 1e6, compiled=False,
+                ladder_rung=None, calib_fingerprint="default",
+                git_sha="a" * 40, host_id="b" * 12, ts=1.0)
+    base.update(kw)
+    return PlanRow(**base)
+
+
+def test_silver_ingests_plan_rows_with_dedup(tmp_path):
+    rec = RunRecord(entry="simulate", engine="hms", trace="w", n=1000,
+                    phases=1, engine_key="hms:k:64x1", compiled=False,
+                    wall_s=0.01, batch=1, counter_digest="0" * 16,
+                    shards=64, t_segments=1, plan_predicted_us=5000.0,
+                    plan_alternatives=[{"shards": 1, "t_segments": 1,
+                                        "predicted_us": 7600.0}],
+                    calib_fingerprint="default", ts=2.0)
+    ledger = tmp_path / "ledger.jsonl"
+    ledger.write_text(json.dumps(rec.to_dict()) + "\n")
+    store = SilverStore(str(tmp_path / "store"))
+    s1 = store.ingest_ledger(str(ledger))
+    assert s1.added == 1 and len(store.plan_rows()) == 1
+    s2 = store.ingest_ledger(str(ledger))        # re-ingest: no-op
+    assert s2.added == 0 and s2.dups == 1
+    assert len(store.plan_rows()) == 1
+    store.close()
+    # plan rows persist and reload from the store's own jsonl
+    warm = SilverStore(str(tmp_path / "store"))
+    rows = warm.plan_rows()
+    assert len(rows) == 1 and rows[0].predicted_us == 5000.0
+    assert warm.summary()["plan_rows"] == 1
+    warm.close()
+
+
+def test_planner_view_regret_and_misplans():
+    rows = [
+        # preferred by prediction (min predicted) but measured slower...
+        _plan_row((64, 1), predicted=100.0, wall_us=500.0),
+        # ...than this rejected shape: a mis-plan with 200us regret
+        _plan_row((1, 1), predicted=200.0, wall_us=300.0),
+        # compile call: excluded from warm stats
+        _plan_row((4, 1), predicted=100.0, wall_us=9000.0, compiled=True),
+        # single-shape group: no regret observable
+        _plan_row((8, 1), predicted=50.0, wall_us=60.0, workload="solo"),
+    ]
+    view = planner_view(rows)
+    assert view["records"] == 4 and view["warm"] == 3
+    assert view["groups"] == 1
+    assert view["ratio"]["n"] == 3
+    assert view["ratio"]["min"] == pytest.approx(1.2)     # 60/50
+    assert view["ratio"]["max"] == pytest.approx(5.0)     # 500/100
+    (entry,) = view["regret"]
+    assert entry["preferred"]["shards"] == 64
+    assert entry["best"]["shards"] == 1
+    assert entry["regret_us"] == pytest.approx(200.0)
+    assert view["misplans"] == [entry]
+    # perfect planner: preferred == best, no misplans
+    good = planner_view([_plan_row((64, 1), 100.0, 300.0),
+                         _plan_row((1, 1), 200.0, 500.0)])
+    assert good["regret"][0]["regret_us"] == 0.0
+    assert good["misplans"] == []
+
+
+def test_report_renders_planner_section():
+    md = "\n".join(render_planner_markdown(planner_view(
+        [_plan_row((64, 1), 100.0, 500.0),
+         _plan_row((1, 1), 200.0, 300.0)])))
+    assert "## Planner accuracy" in md
+    assert "hms:k:1x1" in md and "hms:k:64x1" in md   # mis-plan names keys
+    store = SilverStore(None)
+    assert "Planner accuracy" not in render_markdown(store)
+    for r in ([_plan_row((64, 1), 100.0, 500.0),
+               _plan_row((1, 1), 200.0, 300.0)]):
+        store._absorb_plan(r)
+    assert "## Planner accuracy" in render_markdown(store)
+
+
+# ---------------------------------------------------------------------------
+# The profiler itself (runs both engines: slow lane).
+# ---------------------------------------------------------------------------
+
+def test_calibrate_cli_usage_error():
+    from benchmarks.calibrate import main
+    assert main(["--bogus-flag"]) == 3
+
+
+@pytest.mark.slow
+def test_run_calibration_produces_sane_profile(tmp_path):
+    costmodel.set_calib_mode("off")
+    prof = calibrate.run_calibration(quick=True, n=1536, reps=1)
+    assert prof.source == "measured"
+    assert prof.fingerprint == calibrate.host_fingerprint()
+    for f in ("step_cost_solo", "lane_cost", "um_step_cost_solo",
+              "um_lane_cost"):
+        assert getattr(prof, f) > 0, f
+    assert prof.rounds_base >= 1.0 and prof.rounds_slope >= 0.0
+    # measured profile round-trips bitwise and plans deterministically
+    path = calibrate.save_profile(prof, str(tmp_path))
+    loaded = calibrate.load_profile(path)
+    assert dataclasses.astuple(loaded) == dataclasses.astuple(prof)
+    costmodel.set_profile(loaded)
+    depth_of = lambda s: -(-4000 // s)                  # noqa: E731
+    assert costmodel.plan_hms_split(depth_of, 1) == \
+        costmodel.plan_hms_split(depth_of, 1)

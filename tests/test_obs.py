@@ -11,14 +11,14 @@ The contracts under test:
     shapes (the ledger-level face of the engines' parity guarantees),
   * ``assert_no_retrace`` catches a warm engine deliberately recompiling
     and stays quiet after a blessed ``obs.reset``,
-  * the old scattered instrumentation entry points warn and delegate,
+  * the old scattered instrumentation entry points (deprecated PR 6-9)
+    are gone; ``obs.cache_stats`` / ``obs.reset`` are the only cache API,
   * ``benchmarks.compare`` exits 0 on a self-diff and non-zero when a
     model output is perturbed.
 """
 
 import dataclasses
 import json
-import warnings
 
 import numpy as np
 import pytest
@@ -243,22 +243,19 @@ def test_spans_noop_when_disabled():
 
 
 # ---------------------------------------------------------------------------
-# Deprecated shims.
+# Deprecated shims: removed in PR 10 after a deprecation cycle (PR 6-9).
+# The obs facade (obs.cache_stats / obs.reset) is the only cache API.
 # ---------------------------------------------------------------------------
 
-def test_deprecated_shims_warn_and_delegate():
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        assert sim_mod.engine_cache_size() == \
-            obs.cache_stats()["hms_engines"]
-        assert um.um_engine_cache_size() == \
-            obs.cache_stats()["um_engines"]
-        assert um.um_lanes_run() == obs.cache_stats()["um_lanes_run"]
-        um.clear_um_results()
-        sim_mod.clear_engine_cache()
-    assert len(w) == 5
-    assert all(issubclass(x.category, DeprecationWarning) for x in w)
-    assert obs.cache_stats()["hms_engines"] == 0
+def test_deprecated_shims_are_gone():
+    for name in ("engine_cache_size", "clear_engine_cache"):
+        assert not hasattr(sim_mod, name), name
+    for name in ("um_engine_cache_size", "um_lanes_run",
+                 "clear_um_caches", "clear_um_results"):
+        assert not hasattr(um, name), name
+    # the facade the shims delegated to still covers every removed name
+    stats = obs.cache_stats()
+    assert {"hms_engines", "um_engines", "um_lanes_run"} <= set(stats)
 
 
 # ---------------------------------------------------------------------------
@@ -356,7 +353,11 @@ def test_compare_classify_word_boundary_tokens():
              "faults", "requests", "counter_digest", "best_runtime")
     info = ("grid_shards", "shards", "t_segments", "stitch_rounds",
             "tsplit_speedup", "replay_prefix", "partial", "ts",
-            "ckpt_entries", "degradations", "single_shard_speedup")
+            "ckpt_entries", "degradations", "single_shard_speedup",
+            # calibration / plan-telemetry keys (PR 10): predicted costs,
+            # regret and profile identity vary across hosts and profiles
+            "plan_predicted_us", "plan_alternatives", "calib_fingerprint",
+            "regret_us", "misplans", "predicted_us")
     for leaf in model:
         assert _classify(("workloads", "w", leaf)) == "model", leaf
     for leaf in info:

@@ -418,7 +418,8 @@ def test_ingest_ledger_joins_bench(tmp_path):
     s = SilverStore()
     st_l = s.ingest(str(tmp_path / "obs" / "ledger.jsonl"))
     st_b = s.ingest(str(p))
-    assert st_l.added == 1
+    # the schema-4 record lands one silver row AND one plan-telemetry row
+    assert st_l.added == 2 and len(s.plan_rows()) == 1
     assert st_b.merged == 1 and st_b.added == 0 and st_b.conflicts == 0
     row = s.rows()[0]
     assert len(row.sources) == 2
